@@ -1,0 +1,30 @@
+"""Fig 10(c): query time vs graph density (average degree sweep)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    avg_query_time,
+    build_matcher,
+    dfs_query,
+    emit,
+    random_query,
+)
+from repro.graphstore import generators
+
+
+def main(n: int = 50_000, n_queries: int = 3) -> None:
+    rng = np.random.default_rng(2)
+    for deg in [4, 8, 16, 32, 64]:
+        g = generators.rmat(n, deg * n, 64, seed=5)
+        m = build_matcher(g)
+        qs = [q for q in (dfs_query(g, rng, 6) for _ in range(n_queries)) if q]
+        t, cnt = avg_query_time(m, qs)
+        emit(f"density_dfs_deg{deg}", t * 1e6, f"avg_matches={cnt:.0f}")
+        qs = [random_query(6, 9, g.n_labels, rng) for _ in range(n_queries)]
+        t, cnt = avg_query_time(m, qs)
+        emit(f"density_random_deg{deg}", t * 1e6, f"avg_matches={cnt:.0f}")
+
+
+if __name__ == "__main__":
+    main()

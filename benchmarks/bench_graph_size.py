@@ -1,0 +1,37 @@
+"""Fig 10(a,b): query time vs graph size — fixed degree (16) and fixed
+density; the paper's headline scalability claim (time insensitive to node
+count at fixed degree)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import avg_query_time, build_matcher, dfs_query, emit
+from repro.graphstore import generators
+
+
+def main(n_queries: int = 3) -> None:
+    rng = np.random.default_rng(1)
+    # fixed average degree 16 (paper Fig 10a)
+    for n in [25_000, 50_000, 100_000, 200_000]:
+        g = generators.rmat(n, 16 * n, 64, seed=3)
+        m = build_matcher(g)
+        qs = [q for q in (dfs_query(g, rng, 6) for _ in range(n_queries)) if q]
+        t, cnt = avg_query_time(m, qs)
+        emit(f"graph_size_fixed_degree_n{n}", t * 1e6, f"avg_matches={cnt:.0f}")
+
+    # fixed density m = n^2 * 1e-6-ish → degree grows with n (paper Fig 10b)
+    for n in [20_000, 40_000, 80_000]:
+        m_edges = int(n * n * 4e-4)
+        g = generators.rmat(n, m_edges, 64, seed=4)
+        m = build_matcher(g)
+        qs = [q for q in (dfs_query(g, rng, 6) for _ in range(n_queries)) if q]
+        t, cnt = avg_query_time(m, qs)
+        emit(
+            f"graph_size_fixed_density_n{n}",
+            t * 1e6,
+            f"avg_degree={2*m_edges/n:.0f};avg_matches={cnt:.0f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Table 1 (STwig row): the only index is the label index — linear size,
+linear build time, O(1) update."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.graphstore import PartitionedGraph, generators
+
+
+def main() -> None:
+    sizes = [50_000, 100_000, 200_000, 400_000]
+    per_node = []
+    for n in sizes:
+        g = generators.rmat(n, 4 * n, 64, seed=1)
+        t0 = time.perf_counter()
+        pg = PartitionedGraph.build(g, 1)
+        dt = time.perf_counter() - t0
+        idx_bytes = pg.label_indptr.nbytes + pg.nodes_by_label.nbytes
+        per_node.append(dt / n)
+        emit(
+            f"index_build_n{n}",
+            dt * 1e6,
+            f"bytes={idx_bytes};bytes_per_node={idx_bytes/n:.2f}",
+        )
+    # linearity: time/node stays ~constant as n grows 8×
+    ratio = per_node[-1] / max(per_node[0], 1e-12)
+    emit("index_build_linearity", 0.0, f"time_per_node_ratio_8x={ratio:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Fig 10(d): query time vs label density (label-alphabet size sweep:
+more labels → fewer matches per label → faster)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import avg_query_time, build_matcher, dfs_query, emit
+from repro.graphstore import generators
+
+
+def main(n: int = 50_000, n_queries: int = 3) -> None:
+    rng = np.random.default_rng(3)
+    for n_labels in [4, 16, 64, 256, 1024]:
+        g = generators.rmat(n, 16 * n, n_labels, seed=6)
+        m = build_matcher(g)
+        qs = [q for q in (dfs_query(g, rng, 6) for _ in range(n_queries)) if q]
+        t, cnt = avg_query_time(m, qs)
+        emit(
+            f"label_density_L{n_labels}",
+            t * 1e6,
+            f"label_ratio={n_labels/n:.1e};avg_matches={cnt:.0f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Table 2: graph loading time vs node count (paper: 1M→4B nodes on 12
+machines; here R-MAT scaled to the CPU container, same fixed degree 16)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.graphstore import PartitionedGraph, generators
+
+
+def main() -> None:
+    for n in [62_500, 125_000, 250_000, 500_000]:
+        t0 = time.perf_counter()
+        g = generators.rmat(n, 16 * n, 418, seed=0)
+        pg = PartitionedGraph.build(g, 4)
+        dt = time.perf_counter() - t0
+        emit(
+            f"graph_load_n{n}",
+            dt * 1e6,
+            f"edges={g.n_edges};bytes={pg.memory_bytes()}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""§Roofline: report the three-term roofline for every dry-run artifact
+(single-pod mesh) — produced by ``python -m repro.launch.dryrun --all``."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def main() -> None:
+    files = sorted(ARTIFACTS.glob("*__16x16.json"))
+    if not files:
+        print("roofline_no_artifacts,0.0,run `python -m repro.launch.dryrun --all`")
+        return
+    for f in files:
+        d = json.loads(f.read_text())
+        name = f"roofline_{d['arch']}_{d['shape']}"
+        if d["status"] != "ok":
+            print(f"{name},0.0,status={d['status']}")
+            continue
+        r = d["roofline"]
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        print(
+            f"{name},{bound*1e6:.1f},"
+            f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f};"
+            f"comp_ms={r['t_compute_s']*1e3:.2f};mem_ms={r['t_memory_s']*1e3:.2f};"
+            f"coll_ms={r['t_collective_s']*1e3:.2f};useful={r['useful_flops_ratio']:.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

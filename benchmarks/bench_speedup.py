@@ -1,0 +1,84 @@
+"""Fig 9: speed-up vs machine count (1→8 simulated machines).
+
+Runs in a subprocess because the worker needs multiple XLA host devices
+while the bench session keeps one.
+"""
+from __future__ import annotations
+
+import pathlib
+import subprocess
+import sys
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.graphstore import PartitionedGraph, generators
+from repro.core import QueryGraph, SubgraphMatcher
+from repro.core.dist import DistributedMatcher
+
+g = generators.rmat(60_000, 16 * 60_000, 64, seed=7)
+
+def dfs_query(g, rng, nq):
+    start = int(rng.integers(g.n_nodes))
+    nodes, edges, seen = [start], [], {start}
+    stack = [start]
+    while stack and len(nodes) < nq:
+        v = stack.pop()
+        for u in g.neighbors(v):
+            u = int(u)
+            if u not in seen and len(nodes) < nq:
+                seen.add(u); nodes.append(u); edges.append((v, u)); stack.append(u)
+    if len(nodes) < 2:
+        return None
+    remap = {v: i for i, v in enumerate(nodes)}
+    return QueryGraph.build([int(g.labels[v]) for v in nodes],
+                            [(remap[a], remap[b]) for a, b in edges])
+
+rng = np.random.default_rng(11)
+queries = []
+while len(queries) < 3:
+    q = dfs_query(g, rng, 6)
+    if q is not None:
+        queries.append(q)
+
+for S in (1, 2, 4, 8):
+    pg = PartitionedGraph.build(g, S)
+    if S == 1:
+        m = SubgraphMatcher(pg)
+    else:
+        mesh = Mesh(np.array(jax.devices()[:S]), ("data",))
+        m = DistributedMatcher(pg, mesh)
+    # warmup then measure
+    for q in queries:
+        m.match(q, max_matches=1024, adaptive=False)
+    t0 = time.perf_counter()
+    for q in queries:
+        m.match(q, max_matches=1024, adaptive=False)
+    dt = (time.perf_counter() - t0) / len(queries)
+    print(f"speedup_machines_{S},{dt*1e6:.1f},")
+"""
+
+
+def main() -> None:
+    proc = subprocess.run(
+        [sys.executable, "-c", WORKER],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"},
+        timeout=3000,
+    )
+    if proc.returncode != 0:
+        print(f"speedup_bench_failed,0.0,{proc.stderr[-200:].strip()!r}")
+        return
+    for line in proc.stdout.strip().splitlines():
+        if line.startswith("speedup_"):
+            print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Shared benchmark machinery.
+
+Real datasets (US Patents, WordNet) are unavailable offline; each benchmark
+uses R-MAT graphs with matched node/edge/label counts and notes it. Output
+rows follow the harness convention: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import QueryGraph, SubgraphMatcher
+from repro.graphstore import PartitionedGraph, generators
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *, repeats: int = 3):
+    fn()  # warmup (jit compile)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def dfs_query(g, rng, n_nodes: int) -> QueryGraph | None:
+    start = int(rng.integers(g.n_nodes))
+    nodes, edges, seen = [start], [], {start}
+    stack = [start]
+    while stack and len(nodes) < n_nodes:
+        v = stack.pop()
+        for u in g.neighbors(v):
+            u = int(u)
+            if u not in seen and len(nodes) < n_nodes:
+                seen.add(u)
+                nodes.append(u)
+                edges.append((v, u))
+                stack.append(u)
+    if len(nodes) < 2:
+        return None
+    remap = {v: i for i, v in enumerate(nodes)}
+    return QueryGraph.build(
+        [int(g.labels[v]) for v in nodes],
+        [(remap[a], remap[b]) for a, b in edges],
+    )
+
+
+def random_query(n_nodes, n_edges, n_labels, rng) -> QueryGraph:
+    edges = [(int(rng.integers(i)), i) for i in range(1, n_nodes)]
+    seen = {(min(a, b), max(a, b)) for a, b in edges}
+    tries = 0
+    while len(edges) < n_edges and tries < 10 * n_edges:
+        a, b = rng.integers(n_nodes, size=2)
+        tries += 1
+        key = (min(a, b), max(a, b))
+        if a != b and key not in seen:
+            seen.add(key)
+            edges.append((int(a), int(b)))
+    return QueryGraph.build(rng.integers(0, n_labels, n_nodes).astype(int).tolist(), edges)
+
+
+def patents_like(scale: float = 1.0, seed: int = 0):
+    """US-Patents-shaped R-MAT: 3.77M nodes, 16.5M edges, 418 labels
+    (scaled down by ``scale`` for CPU budgets)."""
+    n = max(int(3_774_768 * scale), 1000)
+    m = max(int(16_522_438 * scale), 4000)
+    return generators.rmat(n, m, 418, seed=seed)
+
+
+def build_matcher(g, n_shards: int = 1) -> SubgraphMatcher:
+    return SubgraphMatcher(PartitionedGraph.build(g, n_shards))
+
+
+def avg_query_time(
+    m: SubgraphMatcher,
+    queries,
+    *,
+    max_matches: int = 1024,
+    adaptive: bool = False,
+) -> tuple[float, float]:
+    """Mean wall-time + mean matches over a query set (pipeline semantics:
+    first `max_matches` per query, as in the paper's experiments)."""
+    times, counts = [], []
+    for q in queries:
+        t0 = time.perf_counter()
+        res = m.match(q, max_matches=max_matches, adaptive=adaptive)
+        times.append(time.perf_counter() - t0)
+        counts.append(res.n_matches)
+    return float(np.mean(times)), float(np.mean(counts))

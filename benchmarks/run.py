@@ -1,0 +1,85 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+prints ``name,us_per_call,derived`` CSV rows.
+
+ paper artifact                        module
+ Table 1 (index linear build/size)    bench_index
+ Table 2 (graph loading)              bench_loading
+ Fig 8(a,b,c) (query/edge size)       bench_query_size
+ Fig 9 (speed-up vs machines)         bench_speedup
+ Fig 10(a,b) (graph size)             bench_graph_size
+ Fig 10(c) (graph density)            bench_density
+ Fig 10(d) (label density)            bench_label_density
+ §Roofline (this brief)               bench_roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller graphs")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_density,
+        bench_graph_size,
+        bench_index,
+        bench_label_density,
+        bench_loading,
+        bench_loadset,
+        bench_query_size,
+        bench_roofline,
+        bench_speedup,
+    )
+
+    suites = {
+        "index": bench_index.main,
+        "loading": bench_loading.main,
+        "query_size": (lambda: bench_query_size.main(scale=0.005, n_queries=3))
+        if args.fast
+        else bench_query_size.main,
+        "speedup": bench_speedup.main,
+        "graph_size": bench_graph_size.main,
+        "density": bench_density.main,
+        "label_density": bench_label_density.main,
+        "loadset": bench_loadset.main,
+        "roofline": bench_roofline.main,
+    }
+    def _gc():
+        # each query spec jit-compiles a fresh executable; without clearing,
+        # hundreds of cached executables exhaust the JIT code allocator
+        import gc
+
+        import jax
+
+        from repro.core import engine as engine_lib
+
+        engine_lib._jit_match.cache_clear()
+        engine_lib._jit_join.cache_clear()
+        jax.clear_caches()
+        gc.collect()
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — report, keep the suite running
+            print(f"{name}_FAILED,0.0,", file=sys.stdout)
+            traceback.print_exc()
+        _gc()
+        print(f"# suite {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

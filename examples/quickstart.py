@@ -1,0 +1,49 @@
+"""Quickstart: build a labeled graph, plan a query with Algorithm 2, match.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import QueryGraph, SubgraphMatcher, stwig_order_selection
+from repro.graphstore import PartitionedGraph, generators
+
+
+def main() -> None:
+    # an R-MAT graph standing in for a real labeled network
+    g = generators.rmat(n_nodes=2000, n_edges=8000, n_labels=24, seed=0)
+    pg = PartitionedGraph.build(g, n_shards=1)
+    matcher = SubgraphMatcher(pg)
+
+    # the paper's running example shape: a 6-node query
+    #     a - b - d - e      (labels are ints)
+    #         |   |
+    #         c   f
+    q = QueryGraph.build(
+        labels=[0, 1, 2, 3, 4, 5],
+        edges=[(0, 1), (1, 2), (1, 3), (3, 4), (3, 5)],
+    )
+
+    dec = stwig_order_selection(q, pg.freq)
+    print("STwig decomposition (Algorithm 2):")
+    for t in dec.stwigs:
+        print(f"  root q{t.root} (label {t.root_label}) -> children {t.children}")
+
+    # the paper's pipelined serving semantics: first 1024 matches (§6.1)
+    res = matcher.match(q, max_matches=1024, adaptive=False)
+    print(f"\n{res.n_matches} matches (complete={res.complete})")
+    print("first rows (query-node order):")
+    for row in res.rows[:5]:
+        print("  ", row)
+    print("\nper-STwig candidate rows:", res.stats["stwig_rows"])
+    print("join order:", res.stats["join_order"])
+    print(f"query time: {res.stats['time_s']*1e3:.1f} ms")
+
+    # cross-check a row
+    for row in res.rows[: min(3, len(res.rows))]:
+        for u, v in q.edges:
+            assert row[v] in g.neighbors(row[u]) or row[u] in g.neighbors(row[v])
+    print("edge-consistency spot check passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Aggregate artifacts/dryrun/*.json into the EXPERIMENTS.md roofline table."""
+import json
+import pathlib
+import sys
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def fmt_row(d):
+    if d["status"] == "skipped":
+        return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | — | — | "
+                f"skipped | — | {d['reason'][:60]} |")
+    if d["status"] != "ok":
+        return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | — | — | "
+                f"**ERROR** | — | {d.get('error','')[:60]} |")
+    r = d["roofline"]
+    note = ""
+    mem = d.get("memory", {})
+    if mem.get("argument_bytes"):
+        note = f"args {mem['argument_bytes']/2**30:.1f} GiB/chip"
+    return (
+        f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+        f"{r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} | "
+        f"{r['t_collective_s']*1e3:.2f} | **{r['bottleneck']}** | "
+        f"{r['roofline_fraction']:.3f} | {r['useful_flops_ratio']:.2f} | {note} |"
+    )
+
+
+def main(variant=None):
+    rows = []
+    for f in sorted(ART.glob("*.json")):
+        d = json.loads(f.read_text())
+        v = d.get("variant", "baseline")
+        if variant is None and v != "baseline":
+            continue
+        if variant is not None and v != variant:
+            continue
+        rows.append((d["arch"], d["shape"], d["mesh"], fmt_row(d)))
+    rows.sort()
+    hdr = ("| arch | shape | mesh | t_comp ms | t_mem ms | t_coll ms | "
+           "bottleneck | roofline frac | useful | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    print(hdr)
+    for _, _, _, r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

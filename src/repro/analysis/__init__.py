@@ -1,0 +1,7 @@
+from repro.analysis.roofline import (
+    CollectiveStats,
+    Roofline,
+    parse_collectives,
+)
+
+__all__ = ["CollectiveStats", "Roofline", "parse_collectives"]

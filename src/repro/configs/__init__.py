@@ -1,0 +1,18 @@
+"""Architecture registry — importing this package registers all configs."""
+from repro.configs import base
+from repro.configs import (  # noqa: F401  (registration side effects)
+    deepseek_v3_671b,
+    egnn,
+    gatedgcn,
+    gemma_2b,
+    gin_tu,
+    meshgraphnet,
+    mixtral_8x22b,
+    qwen1_5_110b,
+    qwen2_72b,
+    stwig,
+    xdeepfm,
+)
+from repro.configs.base import ArchEntry, all_archs, get
+
+__all__ = ["base", "ArchEntry", "all_archs", "get"]

@@ -1,0 +1,32 @@
+"""The paper's contribution: index-free distributed subgraph matching.
+
+Public API:
+    QueryGraph, STwig            — query model (§2.1, §4.1)
+    stwig_order_selection        — Algorithm 2 (decomposition + ordering)
+    make_plan / QueryPlan        — static capacity planning
+    SubgraphMatcher              — single-shard engine
+    DistributedMatcher           — shard_map engine w/ head-STwig + load sets
+"""
+from repro.core.query import QueryGraph, STwig
+from repro.core.decompose import (
+    Decomposition,
+    f_values,
+    head_stwig_selection,
+    stwig_order_selection,
+)
+from repro.core.plan import QueryPlan, STwigSpec, make_plan
+from repro.core.engine import MatchResult, SubgraphMatcher
+
+__all__ = [
+    "QueryGraph",
+    "STwig",
+    "Decomposition",
+    "f_values",
+    "head_stwig_selection",
+    "stwig_order_selection",
+    "QueryPlan",
+    "STwigSpec",
+    "make_plan",
+    "MatchResult",
+    "SubgraphMatcher",
+]

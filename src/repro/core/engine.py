@@ -1,0 +1,186 @@
+"""Single-shard subgraph matching engine (the per-machine executor).
+
+Orchestration is host-side (the paper's query proxy); every dense step is a
+jitted JAX function cached by its static plan spec. The distributed engine
+(`repro.core.dist`) wraps the same match/join steps in ``shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import join as join_lib
+from repro.core.match import (
+    Bindings,
+    ShardGraph,
+    STwigTable,
+    apply_binding_update,
+    match_stwig_shard,
+)
+from repro.core.plan import QueryPlan, STwigSpec, make_plan
+from repro.core.query import QueryGraph
+from repro.graphstore.partition import PartitionedGraph
+
+
+@dataclasses.dataclass
+class MatchResult:
+    rows: np.ndarray          # (n_matches, n_qnodes) ORIGINAL node ids
+    n_matches: int
+    complete: bool            # False if any capacity overflowed (partial set)
+    stats: dict[str, Any]
+
+
+@functools.lru_cache(maxsize=512)
+def _jit_match(spec: STwigSpec):
+    return jax.jit(functools.partial(match_stwig_shard, spec=spec))
+
+
+@functools.lru_cache(maxsize=512)
+def _jit_join(schema_a, schema_b, out_cap: int, dup_cap: int):
+    """Returns (jitted join fn, merged schema). The schema is static — it
+    must not pass through jit."""
+    merged, _ = schema_a.merge(schema_b)
+    fn = jax.jit(
+        lambda a, b: join_lib.sort_merge_join(
+            a, b, schema_a, schema_b, out_cap=out_cap, dup_cap=dup_cap
+        )[0]
+    )
+    return fn, merged
+
+
+def _concat_tables(tables: list[STwigTable], rows_cap: int) -> join_lib.JoinTable:
+    """Concatenate per-round tables into one join input (host-orchestrated)."""
+    cols = jnp.concatenate([t.cols for t in tables], axis=0)
+    valid = jnp.concatenate([t.valid for t in tables], axis=0)
+    n_rows = sum((t.n_rows for t in tables), jnp.int32(0))
+    overflow = functools.reduce(
+        jnp.logical_or, [t.overflow for t in tables], jnp.bool_(False)
+    )
+    return join_lib.JoinTable(cols=cols, valid=valid, n_rows=n_rows, overflow=overflow)
+
+
+class SubgraphMatcher:
+    """Single-device matcher over a (possibly 1-shard) partitioned graph."""
+
+    def __init__(self, pg: PartitionedGraph, shard: int = 0):
+        assert 0 <= shard < pg.n_shards
+        self.pg = pg
+        self.g = ShardGraph(
+            labels=jnp.asarray(pg.labels[shard]),
+            indptr=jnp.asarray(pg.indptr[shard]),
+            indices=jnp.asarray(pg.indices[shard]),
+            edge_src=jnp.asarray(pg.edge_src[shard]),
+            n_local=jnp.int32(pg.n_local[shard]),
+            n_local_edges=jnp.int32(pg.n_local_edges[shard]),
+            shard_id=jnp.int32(shard),
+            all_labels=jnp.asarray(pg.all_labels),
+        )
+
+    # ------------------------------------------------------------------ API
+    def plan(self, query: QueryGraph, **kw) -> QueryPlan:
+        return make_plan(query, self.pg.freq, **kw)
+
+    def match(
+        self,
+        query: QueryGraph,
+        plan: QueryPlan | None = None,
+        *,
+        adaptive: bool = True,
+        max_retries: int = 6,
+        **kw,
+    ) -> MatchResult:
+        """Match with adaptive capacity growth: if any block capacity
+        overflows (paper §4.2: block sizes are set by available memory), the
+        plan is re-made with doubled capacities and the query re-runs. With
+        ``adaptive=False`` the first (possibly partial) result is returned
+        with ``complete=False`` — the paper's first-K pipelined semantics."""
+        res = self._match_once(query, plan, **kw)
+        retries = 0
+        while adaptive and plan is None and not res.complete and retries < max_retries:
+            retries += 1
+            kw = dict(kw)
+            kw["child_cap"] = 2 * kw.get("child_cap", 8) * retries
+            kw["join_rows_cap"] = 4 * kw.get("join_rows_cap", 1 << 16)
+            kw["join_dup_cap"] = 4 * kw.get("join_dup_cap", 64)
+            res = self._match_once(query, None, **kw)
+        res.stats["retries"] = retries
+        return res
+
+    def _match_once(
+        self, query: QueryGraph, plan: QueryPlan | None = None, **kw
+    ) -> MatchResult:
+        t0 = time.perf_counter()
+        plan = plan or self.plan(query, **kw)
+        n_bits = self.pg.n_total + 1
+        bind = Bindings.fresh(plan.n_qnodes, n_bits)
+
+        # ---- exploration: STwigs in Algorithm-2 order ----------------------
+        tables: list[join_lib.JoinTable] = []
+        schemas: list[join_lib.Schema] = []
+        stats: dict[str, Any] = {"stwig_rows": [], "stwig_roots": [], "rounds": []}
+        overflow = False
+        for spec in plan.specs:
+            fn = _jit_match(spec)
+            round_tables: list[STwigTable] = []
+            contrib = None
+            r = 0
+            while True:
+                table, c = fn(self.g, bind, round_idx=jnp.int32(r))
+                round_tables.append(table)
+                cw = c.words
+                contrib = cw if contrib is None else jnp.bitwise_or(contrib, cw)
+                n_roots = int(table.n_roots)
+                r += 1
+                if r * spec.root_cap >= n_roots:
+                    break
+            bind = apply_binding_update(bind, spec, contrib)
+            jt = _concat_tables(round_tables, spec.rows_cap)
+            tables.append(jt)
+            schemas.append(
+                join_lib.Schema(
+                    qnodes=spec.qnodes,
+                    qlabels=(spec.root_label,) + spec.child_labels,
+                )
+            )
+            stats["stwig_rows"].append(int(jt.n_rows))
+            stats["stwig_roots"].append(int(round_tables[0].n_roots))
+            stats["rounds"].append(r)
+            overflow |= bool(jax.device_get(jt.overflow))
+
+        # ---- join phase ----------------------------------------------------
+        counts = stats["stwig_rows"]
+        order = join_lib.select_join_order(schemas, counts)
+        acc, acc_schema = tables[order[0]], schemas[order[0]]
+        for idx in order[1:]:
+            fn, merged = _jit_join(
+                acc_schema, schemas[idx], plan.join_rows_cap, plan.join_dup_cap
+            )
+            acc, acc_schema = fn(acc, tables[idx]), merged
+        overflow |= bool(jax.device_get(acc.overflow))
+
+        # ---- materialize (original ids, query-node column order) ----------
+        cols = np.asarray(jax.device_get(acc.cols))
+        valid = np.asarray(jax.device_get(acc.valid))
+        rows_new = cols[valid]
+        if plan.max_matches and rows_new.shape[0] > plan.max_matches:
+            rows_new = rows_new[: plan.max_matches]
+        perm = np.argsort(np.asarray(acc_schema.qnodes))
+        rows_new = rows_new[:, perm]
+        rows_old = np.where(
+            rows_new < self.pg.n_total, self.pg.new_to_old[np.minimum(rows_new, self.pg.n_total - 1)], -1
+        )
+        stats["join_order"] = [tuple(schemas[i].qnodes) for i in order]
+        stats["time_s"] = time.perf_counter() - t0
+        stats["n_join_rows"] = int(acc.n_rows)
+        return MatchResult(
+            rows=rows_old.astype(np.int64),
+            n_matches=int(rows_old.shape[0]),
+            complete=not overflow,
+            stats=stats,
+        )

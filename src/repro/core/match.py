@@ -1,0 +1,222 @@
+"""Vectorized MatchSTwig (paper Algorithm 1) — the TPU-native exploration.
+
+The paper's per-root loop
+
+    for n in Index.getID(r):  c = Cloud.Load(n); filter children by label/binding
+
+becomes one edge-parallel pass over the shard's CSR arrays:
+
+  1. root candidates  = (label == r) ∧ binding-bit(root)           (node-parallel)
+  2. child candidates = (label[dst] == l_i) ∧ binding-bit(dst)     (edge-parallel)
+  3. per-root candidate lists via segment-rank compaction (scatter)
+  4. STwig emission   = masked cross-product over per-root lists
+  5. binding update   = scatter-OR into packed bitsets
+
+Everything is fixed-capacity (see plan.py); the function reports exact counts
+and overflow flags so the engine can run more rounds. ``repro.kernels.
+stwig_expand`` provides a Pallas TPU kernel for steps 2-4; this module is the
+pure-jnp implementation used as its oracle and as the portable path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphstore.labels import (
+    jnp_bitset_build,
+    jnp_bitset_test,
+    n_words,
+)
+from repro.core.plan import STwigSpec
+
+
+class ShardGraph(NamedTuple):
+    """One shard's slice of the partitioned graph (all jnp arrays)."""
+
+    labels: jnp.ndarray        # (cap,) int32, pad = n_labels
+    indptr: jnp.ndarray        # (cap+1,) int32
+    indices: jnp.ndarray       # (edge_cap,) int32 global ids, pad = n_total
+    edge_src: jnp.ndarray      # (edge_cap,) int32 local rows, pad = cap
+    n_local: jnp.ndarray       # () int32
+    n_local_edges: jnp.ndarray  # () int32
+    shard_id: jnp.ndarray      # () int32
+    all_labels: jnp.ndarray    # (n_total+1,) int32 (replicated)
+
+    @property
+    def cap(self) -> int:
+        return self.labels.shape[0]
+
+    @property
+    def edge_cap(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def n_total(self) -> int:
+        return self.all_labels.shape[0] - 1
+
+
+class STwigTable(NamedTuple):
+    """Fixed-capacity STwig match table G(q_i) for one shard/round."""
+
+    cols: jnp.ndarray     # (rows_cap, width) int32 global ids, pad = ghost
+    valid: jnp.ndarray    # (rows_cap,) bool
+    n_rows: jnp.ndarray   # () int32 exact count (may exceed rows_cap)
+    n_roots: jnp.ndarray  # () int32 total matching roots on this shard
+    overflow: jnp.ndarray  # () bool — any capacity exceeded this round
+
+
+class Bindings(NamedTuple):
+    """Packed binding bitsets H_x for every query node (replicated)."""
+
+    words: jnp.ndarray  # (n_qnodes, n_words) uint32
+
+    @staticmethod
+    def fresh(n_qnodes: int, n_bits: int) -> "Bindings":
+        return Bindings(jnp.zeros((n_qnodes, n_words(n_bits)), jnp.uint32))
+
+
+def _exclusive_cumsum(m: jnp.ndarray) -> jnp.ndarray:
+    c = jnp.cumsum(m.astype(jnp.int32))
+    return c - m.astype(jnp.int32)
+
+
+def match_stwig_shard(
+    g: ShardGraph,
+    bind: Bindings,
+    spec: STwigSpec,
+    round_idx: jnp.ndarray,
+) -> tuple[STwigTable, Bindings]:
+    """Match one STwig on one shard (round ``round_idx`` of root chunks).
+
+    Returns the local match table and *this shard's contribution* to the new
+    bindings for the STwig's query nodes (caller OR-reduces across shards,
+    then replaces rows of ``bind``).
+    """
+    cap, edge_cap = g.cap, g.edge_cap
+    n_total = g.n_total
+    k = spec.n_children
+    C, R = spec.child_cap, spec.root_cap
+    W = bind.words.shape[1]
+
+    node_slot = jnp.arange(cap, dtype=jnp.int32)
+    gid = g.shard_id.astype(jnp.int32) * cap + node_slot
+
+    # ---- step 1: root candidate mask (node-parallel) ----------------------
+    root_mask = (g.labels == spec.root_label) & (node_slot < g.n_local)
+    if spec.root_bound:
+        root_mask &= jnp_bitset_test(bind.words[spec.root_qnode], gid)
+
+    # ---- step 2: per-child candidate edges (edge-parallel) ----------------
+    e_pos = jnp.arange(edge_cap, dtype=jnp.int32)
+    e_valid = e_pos < g.n_local_edges
+    root_ok_e = e_valid & jnp.take(root_mask, g.edge_src, mode="clip") & (
+        g.edge_src < cap
+    )
+    dst_labels = jnp.take(g.all_labels, g.indices, mode="clip")
+
+    cand = []   # per child: (cap+1, C) int32 candidate ids (ghost-padded)
+    cnt = []    # per child: (cap,) int32 exact candidate counts
+    seg_start = jnp.take(g.indptr, jnp.minimum(g.edge_src, cap), mode="clip")
+    for i in range(k):
+        m = root_ok_e & (dst_labels == spec.child_labels[i])
+        if spec.child_bound[i]:
+            m &= jnp_bitset_test(bind.words[spec.child_qnodes[i]], g.indices)
+        ecs = _exclusive_cumsum(m)
+        pos = ecs - jnp.take(ecs, seg_start)
+        c_i = jnp.full((cap + 1, C), n_total, dtype=jnp.int32)
+        src = jnp.where(m, g.edge_src, cap)
+        p = jnp.where(m, pos, C)
+        c_i = c_i.at[src, p].set(g.indices, mode="drop")
+        n_i = jax.ops.segment_sum(
+            m.astype(jnp.int32), g.edge_src, num_segments=cap + 1
+        )[:cap]
+        cand.append(c_i)
+        cnt.append(n_i)
+
+    # ---- prune roots missing required children ----------------------------
+    for i in range(k):
+        root_mask &= cnt[i] >= spec.child_need[i]
+
+    n_roots = jnp.sum(root_mask, dtype=jnp.int32)
+
+    # ---- step 3: select this round's chunk of roots ------------------------
+    rank = _exclusive_cumsum(root_mask)
+    lo = round_idx.astype(jnp.int32) * R
+    sel = root_mask & (rank >= lo) & (rank < lo + R)
+    chunk_pos = jnp.where(sel, rank - lo, R)
+    roots_sel = jnp.full((R,), cap, dtype=jnp.int32)
+    roots_sel = roots_sel.at[chunk_pos].set(node_slot, mode="drop")
+    root_live = roots_sel < cap
+    root_gid = jnp.where(
+        root_live, g.shard_id.astype(jnp.int32) * cap + roots_sel, n_total
+    )
+
+    cand_sel = [jnp.take(cand[i], roots_sel, axis=0, mode="clip") for i in range(k)]
+    cnt_pad = [jnp.concatenate([cnt[i], jnp.zeros((1,), jnp.int32)]) for i in range(k)]
+    cnt_sel = [jnp.take(cnt_pad[i], roots_sel, mode="clip") for i in range(k)]
+
+    # ---- step 4: masked cross-product emission -----------------------------
+    if k > 0:
+        grid = jnp.indices((C,) * k).reshape(k, -1).astype(jnp.int32)  # (k, P)
+        P = grid.shape[1]
+        child_vals = [
+            jnp.take_along_axis(cand_sel[i], grid[i][None, :], axis=1)
+            for i in range(k)
+        ]  # each (R, P)
+        ok = root_live[:, None] & jnp.ones((R, P), bool)
+        for i in range(k):
+            ok &= grid[i][None, :] < cnt_sel[i][:, None]
+        for i, j in spec.same_label_child_pairs:
+            ok &= grid[i][None, :] != grid[j][None, :]
+        for i in spec.root_label_child_positions:
+            ok &= child_vals[i] != root_gid[:, None]
+        flat_ok = ok.reshape(-1)
+        rows = jnp.stack(
+            [jnp.broadcast_to(root_gid[:, None], (R, P)).reshape(-1)]
+            + [v.reshape(-1) for v in child_vals],
+            axis=1,
+        )  # (R*P, width)
+    else:  # pragma: no cover — STwigs always have ≥1 child
+        flat_ok = root_live
+        rows = root_gid[:, None]
+
+    n_rows = jnp.sum(flat_ok, dtype=jnp.int32)
+    rk = _exclusive_cumsum(flat_ok)
+    out_pos = jnp.where(flat_ok, rk, spec.rows_cap)
+    cols = jnp.full((spec.rows_cap, spec.width), n_total, dtype=jnp.int32)
+    cols = cols.at[out_pos].set(rows, mode="drop")
+    valid = jnp.zeros((spec.rows_cap,), bool).at[out_pos].set(
+        flat_ok, mode="drop"
+    )
+
+    overflow = (n_rows > spec.rows_cap) | jnp.any(
+        jnp.stack([jnp.max(cnt[i]) > C for i in range(k)])
+        if k
+        else jnp.zeros((1,), bool)
+    )
+
+    # ---- step 5: binding contributions (scatter-OR) ------------------------
+    new_words = []
+    for pos_, _q in enumerate(spec.qnodes):
+        col = cols[:, pos_]
+        new_words.append(jnp_bitset_build(col, valid, W))
+    contrib = jnp.stack(new_words)  # (width, W)
+
+    table = STwigTable(
+        cols=cols, valid=valid, n_rows=n_rows, n_roots=n_roots, overflow=overflow
+    )
+    return table, Bindings(contrib)
+
+
+def apply_binding_update(
+    bind: Bindings, spec: STwigSpec, contrib_words: jnp.ndarray
+) -> Bindings:
+    """Replace the binding rows of this STwig's query nodes with the (already
+    cross-shard-reduced) contribution. Replacement is valid because emitted
+    columns are always subsets of prior bindings for bound nodes (§4.2)."""
+    words = bind.words
+    for pos, q in enumerate(spec.qnodes):
+        words = words.at[q].set(contrib_words[pos])
+    return Bindings(words)

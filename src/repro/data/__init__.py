@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    gnn_full_batch,
+    gnn_minibatch,
+    lm_batch,
+    recsys_batch,
+)
+
+__all__ = ["gnn_full_batch", "gnn_minibatch", "lm_batch", "recsys_batch"]

@@ -1,0 +1,25 @@
+"""Graph storage substrate: the Trinity-memory-cloud analogue for a TPU mesh.
+
+Host-side (numpy) graph construction, hash partitioning into shard-block
+layout, label indices, cluster-graph preprocessing, synthetic generators and
+the neighbor sampler used for GNN minibatch training.
+"""
+from repro.graphstore.csr import Graph
+from repro.graphstore.partition import PartitionedGraph, shard_of
+from repro.graphstore.labels import LabelIndex, pack_bitset, unpack_bitset, bitset_test_np
+from repro.graphstore.cluster_graph import ClusterGraphIndex
+from repro.graphstore import generators
+from repro.graphstore.sampler import NeighborSampler
+
+__all__ = [
+    "Graph",
+    "PartitionedGraph",
+    "shard_of",
+    "LabelIndex",
+    "pack_bitset",
+    "unpack_bitset",
+    "bitset_test_np",
+    "ClusterGraphIndex",
+    "generators",
+    "NeighborSampler",
+]

@@ -1,0 +1,111 @@
+"""Cluster graph + load-set machinery (paper §5.3, Theorems 3-5).
+
+Preprocessing: for every pair of shards ``(i, j)`` record the set of label
+pairs ``(A, B)`` such that some data edge ``u→v`` with ``T(u)=A, T(v)=B``
+crosses from shard ``i`` to shard ``j``. At query time the *cluster graph*
+``C`` keeps only shard pairs whose label-pair set intersects the query's edge
+label pairs; BFS distances ``D_C`` then bound which remote shards can possibly
+contribute joinable STwig results (Theorem 4):
+
+    F_{k,t} = { j : D_C(k, j) <= d(r_head, r_t) }
+
+and the head STwig is chosen to minimize total communication (Theorem 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClusterGraphIndex:
+    """Host-side preprocessing result.
+
+    ``pair_index`` maps a label pair key ``A * n_labels + B`` to a bool
+    (S, S) shard adjacency. Stored sparsely as a dict of packed shard-pair
+    sets; for the label alphabets in the paper (≤ ~420) and S ≤ 512 this is
+    small. Built once per graph (linear scan over edges).
+    """
+
+    n_shards: int
+    n_labels: int
+    pair_index: dict[int, np.ndarray]  # key -> (n_pairs, 2) int32 shard pairs
+
+    @staticmethod
+    def build(pg) -> "ClusterGraphIndex":
+        si, sj, la, lb = pg.edge_shard_pairs()
+        n_labels = pg.n_labels
+        # unique (label_pair, shard_pair) rows — one vectorized pass
+        key = (
+            (la.astype(np.int64) * n_labels + lb) * pg.n_shards + si
+        ) * pg.n_shards + sj
+        key = np.unique(key)
+        sj_u = key % pg.n_shards
+        rest = key // pg.n_shards
+        si_u = rest % pg.n_shards
+        lp = (rest // pg.n_shards).astype(np.int64)
+        pair_index: dict[int, np.ndarray] = {}
+        order = np.argsort(lp, kind="stable")
+        lp, si_u, sj_u = lp[order], si_u[order], sj_u[order]
+        bounds = np.searchsorted(lp, np.unique(lp), side="left")
+        uniq = np.unique(lp)
+        bounds = np.append(bounds, len(lp))
+        for t, k in enumerate(uniq):
+            s, e = bounds[t], bounds[t + 1]
+            pair_index[int(k)] = np.stack(
+                [si_u[s:e], sj_u[s:e]], axis=1
+            ).astype(np.int32)
+        return ClusterGraphIndex(pg.n_shards, n_labels, pair_index)
+
+    # ------------------------------------------------------------ query time
+    def cluster_adjacency(
+        self, query_label_pairs: list[tuple[int, int]]
+    ) -> np.ndarray:
+        """Bool (S, S) adjacency of the query-specific cluster graph C.
+        ``C[i, i]`` is always True (distance 0 to self)."""
+        S = self.n_shards
+        C = np.zeros((S, S), dtype=bool)
+        np.fill_diagonal(C, True)
+        for a, b in query_label_pairs:
+            for la, lb in ((a, b), (b, a)):  # data edges are symmetrized
+                pairs = self.pair_index.get(int(la) * self.n_labels + int(lb))
+                if pairs is not None:
+                    C[pairs[:, 0], pairs[:, 1]] = True
+        return C
+
+    @staticmethod
+    def bfs_distances(C: np.ndarray) -> np.ndarray:
+        """All-pairs BFS distances on the cluster graph. Unreachable = a
+        large sentinel (S, never ≤ any query distance)."""
+        S = C.shape[0]
+        INF = np.int32(S + 1)
+        D = np.full((S, S), INF, dtype=np.int32)
+        reach = np.eye(S, dtype=bool)
+        D[reach] = 0
+        frontier = reach
+        for dist in range(1, S + 1):
+            nxt = (frontier @ C) & ~reach
+            if not nxt.any():
+                break
+            D[nxt] = dist
+            reach |= nxt
+            frontier = nxt
+        return D
+
+    def load_sets(
+        self,
+        query_label_pairs: list[tuple[int, int]],
+        head_to_root_dist: np.ndarray,
+    ) -> np.ndarray:
+        """Bool (n_stwigs, S, S) mask: entry (t, k, j) says shard k must load
+        results of STwig t from shard j (Theorem 4). Row for the head STwig
+        is the identity (F = ∅ plus self)."""
+        C = self.cluster_adjacency(query_label_pairs)
+        D = self.bfs_distances(C)
+        out = np.zeros(
+            (len(head_to_root_dist), self.n_shards, self.n_shards), dtype=bool
+        )
+        for t, d in enumerate(head_to_root_dist):
+            out[t] = D <= np.int32(d)
+        return out

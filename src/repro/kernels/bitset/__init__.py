@@ -1,0 +1,16 @@
+from repro.kernels.bitset.bitset import (
+    bitset_lookup,
+    bitset_pack,
+    bitset_unpack,
+    candidate_filter,
+)
+from repro.kernels.bitset import ops, ref
+
+__all__ = [
+    "bitset_lookup",
+    "bitset_pack",
+    "bitset_unpack",
+    "candidate_filter",
+    "ops",
+    "ref",
+]

@@ -1,0 +1,145 @@
+"""Pallas TPU kernels for packed binding bitsets (DESIGN.md §2).
+
+Two layouts matter in the matcher:
+  * *range* ops — root-candidate masks over the shard's own contiguous id
+    block: fully vectorized unpack/pack (bit algebra over aligned tiles).
+  * *gather* ops — membership tests for arbitrary (remote) ids:
+    ``bitset_lookup`` gathers one word per id from the VMEM-resident bitset
+    (TPU dynamic-gather; ids tiled over the grid).
+
+The packed uint32 convention matches ``repro.graphstore.labels``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WORD_BITS = 32
+
+
+# ----------------------------------------------------------------- unpack
+def _unpack_kernel(w_ref, o_ref, *, bw: int):
+    w = w_ref[...]  # (BW,)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (bw, WORD_BITS), 1)
+    bits = (w[:, None] >> shifts) & jnp.uint32(1)
+    o_ref[...] = bits.astype(jnp.bool_).reshape(bw * WORD_BITS)
+
+
+def bitset_unpack(words: jnp.ndarray, *, bw: int = 512, interpret: bool = False):
+    """(W,) uint32 → (W*32,) bool, tiled over word blocks."""
+    W = words.shape[0]
+    bw = min(bw, W)
+    while W % bw:
+        bw //= 2
+    return pl.pallas_call(
+        functools.partial(_unpack_kernel, bw=bw),
+        grid=(W // bw,),
+        in_specs=[pl.BlockSpec((bw,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bw * WORD_BITS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((W * WORD_BITS,), jnp.bool_),
+        interpret=interpret,
+    )(words)
+
+
+# ------------------------------------------------------------------- pack
+def _pack_kernel(m_ref, o_ref, *, bw: int):
+    bits = m_ref[...].reshape(bw, WORD_BITS).astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (bw, WORD_BITS), 1)
+    o_ref[...] = jnp.sum(bits << shifts, axis=1).astype(jnp.uint32)
+
+
+def bitset_pack(mask: jnp.ndarray, *, bw: int = 512, interpret: bool = False):
+    """(n,) bool (n % 32 == 0) → (n/32,) uint32."""
+    n = mask.shape[0]
+    assert n % WORD_BITS == 0
+    W = n // WORD_BITS
+    bw = min(bw, W)
+    while W % bw:
+        bw //= 2
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, bw=bw),
+        grid=(W // bw,),
+        in_specs=[pl.BlockSpec((bw * WORD_BITS,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bw,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((W,), jnp.uint32),
+        interpret=interpret,
+    )(mask)
+
+
+# ----------------------------------------------------------------- lookup
+def _lookup_kernel(w_ref, id_ref, o_ref):
+    ids = id_ref[...]
+    words = w_ref[...]                       # VMEM-resident bitset
+    w = jnp.take(words, ids // WORD_BITS, mode="clip")
+    bit = (w >> (ids % WORD_BITS).astype(jnp.uint32)) & jnp.uint32(1)
+    o_ref[...] = bit.astype(jnp.bool_)
+
+
+def bitset_lookup(
+    words: jnp.ndarray,
+    ids: jnp.ndarray,
+    *,
+    bi: int = 2048,
+    interpret: bool = False,
+):
+    """Membership test for arbitrary int32 ids (clipped into range; callers
+    pad with the always-zero ghost id). The bitset stays VMEM-resident across
+    id tiles — per-shard bitsets are ≤ a few MB at production shard counts."""
+    n = ids.shape[0]
+    bi = min(bi, n)
+    while n % bi:
+        bi //= 2
+    return pl.pallas_call(
+        _lookup_kernel,
+        grid=(n // bi,),
+        in_specs=[
+            pl.BlockSpec(words.shape, lambda i: (0,)),
+            pl.BlockSpec((bi,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bi,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(words, ids)
+
+
+# --------------------------------------------------------- candidate filter
+def _cand_filter_kernel(w_ref, id_ref, lab_ref, rok_ref, o_ref, *, child_label):
+    """Fused MatchSTwig step-2: per edge, dst-label equality ∧ binding-bit
+    test ∧ root-candidacy — one VMEM pass instead of three XLA ops."""
+    ids = id_ref[...]
+    words = w_ref[...]
+    w = jnp.take(words, ids // WORD_BITS, mode="clip")
+    bit = ((w >> (ids % WORD_BITS).astype(jnp.uint32)) & jnp.uint32(1)) > 0
+    o_ref[...] = rok_ref[...] & (lab_ref[...] == child_label) & bit
+
+
+def candidate_filter(
+    words: jnp.ndarray,       # (W,) uint32 binding bitset (VMEM-resident)
+    dst_ids: jnp.ndarray,     # (E,) int32 edge destination ids
+    dst_labels: jnp.ndarray,  # (E,) int32 destination labels
+    root_ok: jnp.ndarray,     # (E,) bool root-candidacy per edge
+    child_label: int,
+    *,
+    bi: int = 2048,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n = dst_ids.shape[0]
+    bi = min(bi, n)
+    while n % bi:
+        bi //= 2
+    return pl.pallas_call(
+        functools.partial(_cand_filter_kernel, child_label=child_label),
+        grid=(n // bi,),
+        in_specs=[
+            pl.BlockSpec(words.shape, lambda i: (0,)),
+            pl.BlockSpec((bi,), lambda i: (i,)),
+            pl.BlockSpec((bi,), lambda i: (i,)),
+            pl.BlockSpec((bi,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bi,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(words, dst_ids, dst_labels, root_ok)

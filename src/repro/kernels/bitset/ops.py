@@ -1,0 +1,38 @@
+"""Jitted wrappers choosing Pallas-on-TPU / jnp elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitset import bitset as k
+from repro.kernels.bitset import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def unpack(words, *, use_pallas=None, interpret=False):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return k.bitset_unpack(words, interpret=interpret)
+    return ref.unpack_reference(words)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def pack(mask, *, use_pallas=None, interpret=False):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return k.bitset_pack(mask, interpret=interpret)
+    return ref.pack_reference(mask)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def lookup(words, ids, *, use_pallas=None, interpret=False):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return k.bitset_lookup(words, ids, interpret=interpret)
+    return ref.lookup_reference(words, ids)

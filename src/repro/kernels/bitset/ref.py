@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the bitset kernels (shared with graphstore.labels)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.graphstore.labels import WORD_BITS
+
+
+def unpack_reference(words: jnp.ndarray) -> jnp.ndarray:
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(-1).astype(jnp.bool_)
+
+
+def pack_reference(mask: jnp.ndarray) -> jnp.ndarray:
+    n = mask.shape[0]
+    lanes = mask.reshape(n // WORD_BITS, WORD_BITS).astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(lanes << shifts, axis=1, dtype=jnp.uint32)
+
+
+def lookup_reference(words: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    w = jnp.take(words, ids // WORD_BITS, mode="clip")
+    return ((w >> (ids % WORD_BITS).astype(jnp.uint32)) & 1).astype(jnp.bool_)
+
+
+def candidate_filter_reference(words, dst_ids, dst_labels, root_ok, child_label):
+    """Oracle for the fused MatchSTwig step-2 filter (matches core.match)."""
+    return root_ok & (dst_labels == child_label) & lookup_reference(words, dst_ids)

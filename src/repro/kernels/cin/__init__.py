@@ -1,0 +1,4 @@
+from repro.kernels.cin.cin import cin_layer
+from repro.kernels.cin import ops, ref
+
+__all__ = ["cin_layer", "ops", "ref"]

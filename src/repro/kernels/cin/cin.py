@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: fused xDeepFM CIN layer (arXiv:1803.05170).
+
+One CIN layer is x_k[b,h',d] = Σ_{h,m} W[h·m, h'] · x_{k-1}[b,h,d] · x0[b,m,d].
+The naive path materializes z = (B, H·m, d) (the outer product); the kernel
+fuses the outer product with the W contraction per (batch-tile × d-tile), so
+z only ever exists as a VMEM tile — the dominant HBM term drops from
+O(B·H·m·d) to O(B·(H+m)·d).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cin_kernel(xk_ref, x0_ref, w_ref, o_ref, *, h: int, m: int):
+    xk = xk_ref[0]                      # (H, BD)
+    x0 = x0_ref[0]                      # (m, BD)
+    w = w_ref[...]                      # (H*m, H')
+    z = (xk[:, None, :] * x0[None, :, :]).reshape(h * m, -1)  # VMEM only
+    o_ref[0] = jax.lax.dot_general(
+        w, z, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)               # (H', BD)
+
+
+def cin_layer(
+    xk: jnp.ndarray,   # (B, H, d)
+    x0: jnp.ndarray,   # (B, m, d)
+    w: jnp.ndarray,    # (H*m, H')
+    *,
+    bd: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, d = xk.shape
+    m = x0.shape[1]
+    Hp = w.shape[1]
+    bd = min(bd, d)
+    while d % bd:
+        bd //= 2
+    out = pl.pallas_call(
+        functools.partial(_cin_kernel, h=H, m=m),
+        grid=(B, d // bd),
+        in_specs=[
+            pl.BlockSpec((1, H, bd), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, m, bd), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((H * m, Hp), lambda b, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hp, bd), lambda b, j: (b, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Hp, d), xk.dtype),
+        interpret=interpret,
+    )(xk, x0, w)
+    return out

@@ -1,0 +1,21 @@
+"""Jitted wrapper for the fused CIN layer."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.cin import cin as k
+from repro.kernels.cin import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def cin_layer(xk, x0, w, *, use_pallas=None, interpret=False):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return k.cin_layer(xk, x0, w, interpret=interpret)
+    return ref.cin_layer_reference(xk, x0, w)

@@ -1,0 +1,10 @@
+"""Oracle: the materialized CIN layer (matches models/recsys._cin)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cin_layer_reference(xk: jnp.ndarray, x0: jnp.ndarray, w: jnp.ndarray):
+    B, H, d = xk.shape
+    z = jnp.einsum("bhd,bmd->bhmd", xk, x0).reshape(B, -1, d)
+    return jnp.einsum("bzd,zh->bhd", z, w)

@@ -1,0 +1,143 @@
+"""Pallas TPU flash attention (forward), GQA + causal + sliding window.
+
+Tiling: grid = (batch, kv_head, q_group, Sq/BQ, Skv/BK); the kv axis is the
+innermost (sequential) dimension so the online-softmax state (m, l, acc)
+lives in VMEM scratch across kv steps. Block shapes are MXU-aligned
+(BQ/BK multiples of 128 when the sequence allows; the head dim is the lane
+dimension).
+
+Validated in interpret mode against ``ref.mha_reference`` (which is itself
+cross-checked with ``repro.models.layers.attention``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,    # (1, BQ, 1, 1, H)
+    k_ref,    # (1, BK, 1, H)
+    v_ref,    # (1, BK, 1, Hv)
+    o_ref,    # (1, BQ, 1, 1, Hv)
+    m_ref,    # scratch (BQ,)
+    l_ref,    # scratch (BQ,)
+    acc_ref,  # scratch (BQ, Hv)
+    *,
+    bq: int,
+    bk: int,
+    scale: float,
+    window: int | None,
+    softcap: float | None,
+    kv_steps: int,
+):
+    qi = pl.program_id(3)
+    ki = pl.program_id(4)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, 0, :].astype(jnp.float32)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (BQ, BK)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+
+    pos_q = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    pos_k = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, v_ref[0, :, 0, :].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _finalize():
+        o_ref[0, :, 0, 0, :] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,   # (B, Sq, Nq, H)
+    k: jnp.ndarray,   # (B, Skv, Nkv, H)
+    v: jnp.ndarray,   # (B, Skv, Nkv, Hv)
+    *,
+    scale: float | None = None,
+    window: int | None = None,
+    softcap: float | None = None,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Causal GQA flash attention. Sq == Skv (training/prefill shape)."""
+    B, Sq, Nq, H = q.shape
+    _, Skv, Nkv, Hv = v.shape
+    assert Sq == Skv, "training kernel: square attention"
+    G = Nq // Nkv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    while Sq % bq:
+        bq //= 2
+    while Skv % bk:
+        bk //= 2
+    kv_steps = Skv // bk
+    scale = scale if scale is not None else H**-0.5
+
+    qg = q.reshape(B, Sq, Nkv, G, H)
+    grid = (B, Nkv, G, Sq // bq, kv_steps)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        bq=bq,
+        bk=bk,
+        scale=scale,
+        window=window,
+        softcap=softcap,
+        kv_steps=kv_steps,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, 1, H), lambda b, n, g, i, j: (b, i, n, g, 0)),
+            pl.BlockSpec((1, bk, 1, H), lambda b, n, g, i, j: (b, j, n, 0)),
+            pl.BlockSpec((1, bk, 1, Hv), lambda b, n, g, i, j: (b, j, n, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bq, 1, 1, Hv), lambda b, n, g, i, j: (b, i, n, g, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Nkv, G, Hv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, Hv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+    return out.reshape(B, Sq, Nq, Hv)

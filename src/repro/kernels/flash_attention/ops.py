@@ -1,0 +1,38 @@
+"""Jitted public wrapper: picks the Pallas kernel on TPU, the chunked-jnp
+path elsewhere (and in interpret-mode validation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import mha_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "softcap", "use_pallas", "interpret")
+)
+def attention_fwd(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    scale: float | None = None,
+    window: int | None = None,
+    softcap: float | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return flash_attention(
+            q, k, v, scale=scale, window=window, softcap=softcap,
+            interpret=interpret,
+        )
+    return mha_reference(q, k, v, scale=scale, window=window, softcap=softcap)

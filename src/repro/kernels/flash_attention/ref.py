@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mha_reference(
+    q: jnp.ndarray,   # (B, Sq, Nq, H)
+    k: jnp.ndarray,   # (B, Skv, Nkv, H)
+    v: jnp.ndarray,   # (B, Skv, Nkv, Hv)
+    *,
+    scale: float | None = None,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jnp.ndarray:
+    B, Sq, Nq, H = q.shape
+    _, Skv, Nkv, Hv = v.shape
+    G = Nq // Nkv
+    scale = scale if scale is not None else H**-0.5
+    qg = q.reshape(B, Sq, Nkv, G, H).astype(jnp.float32)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    pos_q = np.arange(Sq)[:, None]
+    pos_k = np.arange(Skv)[None, :]
+    ok = pos_k <= pos_q
+    if window is not None:
+        ok = ok & (pos_k > pos_q - window)
+    logits = jnp.where(jnp.asarray(ok)[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Nq, Hv).astype(q.dtype)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel for the sort-merge join probe (paper §4.2 step 3).
+
+Build side: sorted uint32 hash keys (VMEM-resident — join tables are the
+paper's memory-bounded pipeline blocks, ≤ a few hundred K rows).
+Probe side: tiled key blocks; for each probe key a fully vectorized binary
+search (log2(capA) compare/select steps over the resident keys) yields the
+run start, then a static window of ``dup_cap`` candidates is emitted as
+(hit, a_row) pairs. Exact column verification stays in XLA (it needs the
+wide table payloads, which would blow VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(ka_ref, kb_ref, lo_ref, *, cap_a: int, steps: int):
+    ka = ka_ref[...]                 # (capA,) uint32 sorted
+    kb = kb_ref[...]                 # (BB,) uint32
+    bb = kb.shape[0]
+    lo = jnp.zeros((bb,), jnp.int32)
+    hi = jnp.full((bb,), cap_a, jnp.int32)
+    for _ in range(steps):           # static unroll: ceil(log2(capA)) steps
+        mid = (lo + hi) // 2
+        vals = jnp.take(ka, jnp.minimum(mid, cap_a - 1))
+        go_right = vals < kb
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    lo_ref[...] = lo
+
+
+def probe_lower_bound(
+    ka_sorted: jnp.ndarray,   # (capA,) uint32 ascending
+    kb: jnp.ndarray,          # (capB,) uint32
+    *,
+    bb: int = 2048,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """searchsorted(ka, kb, side='left') as a Pallas kernel."""
+    cap_a = ka_sorted.shape[0]
+    n = kb.shape[0]
+    bb = min(bb, n)
+    while n % bb:
+        bb //= 2
+    steps = max(1, (cap_a - 1).bit_length())
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, cap_a=cap_a, steps=steps),
+        grid=(n // bb,),
+        in_specs=[
+            pl.BlockSpec((cap_a,), lambda i: (0,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(ka_sorted, kb)
+
+
+def _window_kernel(ka_ref, kb_ref, lo_ref, hit_ref, idx_ref, *, cap_a, dup_cap):
+    ka = ka_ref[...]
+    kb = kb_ref[...]
+    lo = lo_ref[...]
+    probe = lo[:, None] + jax.lax.broadcasted_iota(jnp.int32, (kb.shape[0], dup_cap), 1)
+    in_range = probe < cap_a
+    pc = jnp.minimum(probe, cap_a - 1)
+    vals = jnp.take(ka, pc)
+    hit_ref[...] = in_range & (vals == kb[:, None])
+    idx_ref[...] = pc
+
+
+def probe_window(
+    ka_sorted: jnp.ndarray,
+    kb: jnp.ndarray,
+    lo: jnp.ndarray,
+    *,
+    dup_cap: int,
+    bb: int = 2048,
+    interpret: bool = False,
+):
+    """Expand each probe's run window: (hit (capB, W) bool, idx (capB, W))."""
+    cap_a = ka_sorted.shape[0]
+    n = kb.shape[0]
+    bb = min(bb, n)
+    while n % bb:
+        bb //= 2
+    return pl.pallas_call(
+        functools.partial(_window_kernel, cap_a=cap_a, dup_cap=dup_cap),
+        grid=(n // bb,),
+        in_specs=[
+            pl.BlockSpec((cap_a,), lambda i: (0,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, dup_cap), lambda i: (i, 0)),
+            pl.BlockSpec((bb, dup_cap), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, dup_cap), jnp.bool_),
+            jax.ShapeDtypeStruct((n, dup_cap), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ka_sorted, kb, lo)

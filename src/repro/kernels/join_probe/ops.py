@@ -1,0 +1,29 @@
+"""Jitted wrappers for the join-probe kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.join_probe import join_probe as k
+from repro.kernels.join_probe import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def lower_bound(ka_sorted, kb, *, use_pallas=None, interpret=False):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return k.probe_lower_bound(ka_sorted, kb, interpret=interpret)
+    return ref.lower_bound_reference(ka_sorted, kb)
+
+
+@functools.partial(jax.jit, static_argnames=("dup_cap", "use_pallas", "interpret"))
+def window(ka_sorted, kb, lo, *, dup_cap, use_pallas=None, interpret=False):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return k.probe_window(ka_sorted, kb, lo, dup_cap=dup_cap, interpret=interpret)
+    return ref.window_reference(ka_sorted, kb, lo, dup_cap=dup_cap)

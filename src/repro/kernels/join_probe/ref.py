@@ -1,0 +1,17 @@
+"""Oracles for the join-probe kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lower_bound_reference(ka_sorted: jnp.ndarray, kb: jnp.ndarray) -> jnp.ndarray:
+    return jnp.searchsorted(ka_sorted, kb, side="left").astype(jnp.int32)
+
+
+def window_reference(ka_sorted, kb, lo, *, dup_cap: int):
+    cap_a = ka_sorted.shape[0]
+    probe = lo[:, None] + jnp.arange(dup_cap, dtype=jnp.int32)[None, :]
+    in_range = probe < cap_a
+    pc = jnp.minimum(probe, cap_a - 1)
+    vals = jnp.take(ka_sorted, pc)
+    return in_range & (vals == kb[:, None]), pc

@@ -1,0 +1,4 @@
+from repro.kernels.segment_mp.segment_mp import segment_mp, segment_mp_partials
+from repro.kernels.segment_mp import ops, ref
+
+__all__ = ["segment_mp", "segment_mp_partials", "ops", "ref"]

@@ -1,0 +1,23 @@
+"""Jitted wrapper: Pallas on TPU (sorted edges), segment_sum elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.segment_mp import ref
+from repro.kernels.segment_mp import segment_mp as k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "use_pallas", "interpret"))
+def aggregate(messages, dst_sorted, *, n_nodes, use_pallas=None, interpret=False):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return k.segment_mp(
+            messages, dst_sorted, n_nodes, interpret=interpret
+        )
+    return ref.segment_mp_reference(messages, dst_sorted, n_nodes)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for GNN message aggregation (segment-sum over a sorted
+edge→node scatter) — the SpMM-regime hot path (taxonomy §GNN).
+
+Edges arrive sorted by destination (the graphstore CSR guarantees it).
+Per edge block the kernel computes each edge's *rank* — the number of edges
+in the block with a strictly smaller destination (equal destinations share a
+rank) — via one (BE×BE) comparison matrix, then contracts the rank one-hot
+against the message block on the MXU. That compacts every distinct
+destination in the block to one partial row regardless of how sparse the
+node ids are. A second one-hot contraction recovers each rank's node id.
+Partials from different blocks may target the same node (segments straddle
+block boundaries), so a cheap XLA epilogue scatter-adds the
+(n_blocks · BE, d) partials — O(E) work total, one pass over messages.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mp_kernel(msg_ref, dst_ref, out_ref, nid_ref, *, be: int, sentinel: int):
+    msg = msg_ref[...]                    # (BE, d)
+    dst = dst_ref[...]                    # (BE,) int32 sorted ascending
+    # rank[i] = #edges with strictly smaller dst (ties share a rank)
+    smaller = dst[:, None] > dst[None, :]             # (BE, BE)
+    rank = jnp.sum(smaller.astype(jnp.int32), axis=1)  # (BE,)
+    onehot = (
+        rank[None, :] == jax.lax.broadcasted_iota(jnp.int32, (be, be), 0)
+    ).astype(msg.dtype)                   # (BE rows, BE edges)
+    out_ref[0] = jax.lax.dot_general(
+        onehot, msg, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)               # (BE, d) partial sums per rank
+    cnt = jnp.sum(onehot, axis=1)
+    nid_sum = jnp.sum(onehot * dst[None, :].astype(msg.dtype), axis=1)
+    nid = jnp.where(cnt > 0, nid_sum / jnp.maximum(cnt, 1.0), sentinel)
+    nid_ref[0] = nid.astype(jnp.int32)
+
+
+def segment_mp_partials(
+    messages: jnp.ndarray,   # (E, d) — already-masked edge messages
+    dst_sorted: jnp.ndarray,  # (E,) int32 ascending destination ids
+    n_nodes: int,
+    *,
+    be: int = 256,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (partials (n_blocks, BE, d), nids (n_blocks, BE))."""
+    E, d = messages.shape
+    be = min(be, E)
+    while E % be:
+        be //= 2
+    nb = E // be
+    out, nid = pl.pallas_call(
+        functools.partial(_mp_kernel, be=be, sentinel=n_nodes),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((be, d), lambda i: (i, 0)),
+            pl.BlockSpec((be,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, be, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, be), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, be, d), messages.dtype),
+            jax.ShapeDtypeStruct((nb, be), jnp.int32),
+        ],
+        interpret=interpret,
+    )(messages, dst_sorted)
+    return out, nid
+
+
+def segment_mp(
+    messages: jnp.ndarray,
+    dst_sorted: jnp.ndarray,
+    n_nodes: int,
+    *,
+    be: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Full fused segment-sum: Pallas partial pass + XLA scatter epilogue."""
+    partials, nids = segment_mp_partials(
+        messages, dst_sorted, n_nodes, be=be, interpret=interpret
+    )
+    nb, bn, d = partials.shape
+    out = jnp.zeros((n_nodes, d), messages.dtype)
+    return out.at[nids.reshape(-1)].add(
+        partials.reshape(nb * bn, d), mode="drop"
+    )

@@ -1,0 +1,10 @@
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.sharding import axis_rules, logical, spec_for
+
+__all__ = [
+    "make_host_mesh",
+    "make_production_mesh",
+    "axis_rules",
+    "logical",
+    "spec_for",
+]

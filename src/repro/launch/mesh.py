@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — 256 chips (one TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips across 2 pods; the
+``pod`` axis carries data parallelism with compressed gradients by default
+and can alternatively serve as a pipeline axis (launch/pipeline.py).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+device query.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n: int | None = None, axis: str = "data"):
+    """A small CPU mesh over however many (host) devices exist — used by the
+    distributed matcher tests and examples."""
+    devs = jax.devices()
+    n = n or len(devs)
+    return jax.make_mesh((n,), (axis,), devices=devs[:n])
+
+
+def mesh_axis_size(mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    out = 1
+    for n in names:
+        if n in mesh.shape:
+            out *= mesh.shape[n]
+    return out

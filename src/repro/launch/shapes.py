@@ -1,0 +1,390 @@
+"""Per-cell input specs for the multi-pod dry-run.
+
+Every (architecture × assigned input shape) cell defines:
+  * ``fn(cfg)``            — the step function that gets lowered
+                             (train_step / prefill / decode / serve / retrieve)
+  * ``abstract_args(cfg)`` — ShapeDtypeStruct stand-ins (never allocated)
+  * ``arg_axes(cfg)``      — logical axis names per leaf, mapped to mesh axes
+                             by the active rule set (launch/rules.py)
+  * ``kind``               — which rule set variant applies
+
+Sharded dims are padded to multiples of 512 (the multi-pod chip count) so
+both meshes divide them; padding semantics are carried by the masks that all
+models already take.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs.base import ArchEntry, GNNConfig, LMConfig, RecSysConfig
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as recsys_lib
+from repro.models import transformer as tf
+from repro.models.schema import ParamDef, _flatten, abstract_params
+from repro.train.step import make_train_step
+
+F32, I32, BOOL = jnp.float32, jnp.int32, jnp.bool_
+
+
+def _pad(n: int, mult: int = 512) -> int:
+    return mult * math.ceil(n / mult)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------- schema ax
+def schema_axes(schema) -> dict:
+    out: dict = {}
+    for path, d in _flatten(schema):
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = d.axes
+    return out
+
+
+def opt_abstract_and_axes(schema, opt_cfg: optim.AdamWConfig):
+    params_abs = abstract_params(schema)
+    axes = schema_axes(schema)
+    state_abs = jax.eval_shape(lambda p: optim.init(opt_cfg, p), params_abs)
+
+    def moment_axes(a):
+        if opt_cfg.quantize_moments:
+            return optim.adamw.QTensor(q=a, scale=tuple(a[:-1]) + (None,))
+        return a
+
+    state_axes = optim.AdamWState(
+        step=(),
+        m=jax.tree.map(
+            moment_axes, axes, is_leaf=lambda x: isinstance(x, tuple)
+        ),
+        v=jax.tree.map(
+            moment_axes, axes, is_leaf=lambda x: isinstance(x, tuple)
+        ),
+    )
+    return state_abs, state_axes
+
+
+@dataclasses.dataclass
+class CellDef:
+    arch_id: str
+    shape_id: str
+    kind: str                      # rule-set variant
+    fn: Callable                   # (cfg, opt_cfg) -> step callable
+    abstract_args: Callable        # (cfg, opt_cfg) -> tuple pytree
+    arg_axes: Callable             # (cfg, opt_cfg) -> tuple pytree of axes
+    donate: tuple[int, ...] = ()
+    note: str = ""
+
+
+# -------------------------------------------------------------------- LM
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode_long", seq=524288, batch=1),
+}
+
+
+def _lm_cache_abstract(cfg: LMConfig, batch: int, s_cap: int):
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    if cfg.mla is not None:
+        m = cfg.mla
+        data = (
+            _sds((L, batch, s_cap, m.kv_lora_rank), dt),
+            _sds((L, batch, s_cap, m.d_rope), dt),
+        )
+        axes = (
+            ("layer", "batch", "kv_seq", None),
+            ("layer", "batch", "kv_seq", None),
+        )
+    else:
+        sh = (L, batch, s_cap, cfg.n_kv_heads, cfg.d_head)
+        data = (_sds(sh, dt), _sds(sh, dt))
+        axes = (("layer", "batch", "kv_seq", "kv_heads", None),) * 2
+    kind = "mla" if cfg.mla is not None else "gqa"
+    return (
+        tf.DecodeCache(data, kind, s_cap, False),
+        tf.DecodeCache(axes, kind, s_cap, False),
+    )
+
+
+def lm_cell(entry: ArchEntry, shape_id: str) -> CellDef:
+    spec = LM_SHAPES[shape_id]
+    kind = spec["kind"]
+    cfg: LMConfig = entry.config
+
+    if kind == "train":
+        def fn(cfg, opt_cfg):
+            return make_train_step(cfg, opt_cfg)
+
+        def abstract_args(cfg, opt_cfg):
+            from repro.models.transformer import lm_schema
+
+            sch = lm_schema(cfg)
+            state_abs, _ = opt_abstract_and_axes(sch, opt_cfg)
+            return (
+                abstract_params(sch),
+                state_abs,
+                {"tokens": _sds((spec["batch"], spec["seq"]), I32)},
+                _sds((), I32),
+            )
+
+        def arg_axes(cfg, opt_cfg):
+            from repro.models.transformer import lm_schema
+
+            sch = lm_schema(cfg)
+            _, state_axes = opt_abstract_and_axes(sch, opt_cfg)
+            return (
+                schema_axes(sch),
+                state_axes,
+                {"tokens": ("batch", "seq")},
+                (),
+            )
+
+        return CellDef(entry.arch_id, shape_id, kind, fn, abstract_args, arg_axes, donate=(0, 1))
+
+    if kind == "prefill":
+        def fn(cfg, opt_cfg):
+            return lambda params, tokens: tf.prefill(cfg, params, tokens)
+
+        def abstract_args(cfg, opt_cfg):
+            from repro.models.transformer import lm_schema
+
+            return (
+                abstract_params(lm_schema(cfg)),
+                _sds((spec["batch"], spec["seq"]), I32),
+            )
+
+        def arg_axes(cfg, opt_cfg):
+            from repro.models.transformer import lm_schema
+
+            return (schema_axes(lm_schema(cfg)), ("batch", "seq"))
+
+        return CellDef(entry.arch_id, shape_id, kind, fn, abstract_args, arg_axes)
+
+    # decode / decode_long
+    def fn(cfg, opt_cfg):
+        return lambda params, cache, token, pos: tf.decode_step(
+            cfg, params, cache, token, pos
+        )
+
+    def abstract_args(cfg, opt_cfg):
+        from repro.models.transformer import lm_schema
+
+        cache_abs, _ = _lm_cache_abstract(cfg, spec["batch"], spec["seq"])
+        return (
+            abstract_params(lm_schema(cfg)),
+            cache_abs,
+            _sds((spec["batch"], 1), I32),
+            _sds((), I32),
+        )
+
+    def arg_axes(cfg, opt_cfg):
+        from repro.models.transformer import lm_schema
+
+        _, cache_axes = _lm_cache_abstract(cfg, spec["batch"], spec["seq"])
+        return (
+            schema_axes(lm_schema(cfg)),
+            cache_axes,
+            ("batch", None),
+            (),
+        )
+
+    return CellDef(entry.arch_id, shape_id, kind, fn, abstract_args, arg_axes, donate=(1,))
+
+
+# ------------------------------------------------------------------- GNN
+GNN_SHAPES = {
+    "full_graph_sm": dict(n=2708, e=10556, d=1433, task="node"),
+    "minibatch_lg": dict(n=170624, e=168960, d=602, task="node"),
+    "ogb_products": dict(n=2449029, e=61859140, d=100, task="node"),
+    "molecule": dict(n=3840, e=8192, d=32, task="graph", n_graphs=128),
+}
+
+
+def _gnn_batch_abstract(cfg: GNNConfig, s: dict, *, regression: bool = False):
+    N, E = _pad(s["n"]), _pad(s["e"])
+    task = s["task"]
+    g = gnn_lib.GraphBatch(
+        node_feat=_sds((N, s["d"]), F32),
+        edge_src=_sds((E,), I32),
+        edge_dst=_sds((E,), I32),
+        node_mask=_sds((N,), BOOL),
+        edge_mask=_sds((E,), BOOL),
+        edge_feat=_sds((E, cfg.d_edge), F32) if cfg.d_edge else None,
+        node_pos=_sds((N, 3), F32) if cfg.kind == "egnn" else None,
+        graph_id=_sds((N,), I32) if task == "graph" else None,
+        n_graphs=s.get("n_graphs", 1),
+        labels=_sds(
+            (s.get("n_graphs", N) if task == "graph" else N,),
+            F32 if regression else I32,
+        ),
+        label_mask=_sds((N,), BOOL) if task != "graph" else None,
+    )
+    ax = gnn_lib.GraphBatch(
+        node_feat=("nodes", "feat"),
+        edge_src=("edges",),
+        edge_dst=("edges",),
+        node_mask=("nodes",),
+        edge_mask=("edges",),
+        edge_feat=("edges", None) if cfg.d_edge else None,
+        node_pos=("nodes", None) if cfg.kind == "egnn" else None,
+        graph_id=("nodes",) if task == "graph" else None,
+        n_graphs=s.get("n_graphs", 1),
+        labels=("graph_batch",) if task == "graph" else ("nodes",),
+        label_mask=("nodes",) if task != "graph" else None,
+    )
+    return g, ax
+
+
+def gnn_cell(entry: ArchEntry, shape_id: str) -> CellDef:
+    s = GNN_SHAPES[shape_id]
+    base_cfg: GNNConfig = entry.config
+    regression = base_cfg.task == "regression"
+    # the shape dictates input dim and pooling level; the arch dictates the
+    # loss kind (float labels → MSE, incl. graph-level regression)
+    task = "graph" if s["task"] == "graph" else (
+        "regression" if regression else "node"
+    )
+
+    def adapt(cfg: GNNConfig) -> GNNConfig:
+        return dataclasses.replace(cfg, d_in=s["d"], task=task)
+
+    def fn(cfg, opt_cfg):
+        return make_train_step(adapt(cfg), opt_cfg)
+
+    def abstract_args(cfg, opt_cfg):
+        c = adapt(cfg)
+        sch = gnn_lib.gnn_schema(c)
+        state_abs, _ = opt_abstract_and_axes(sch, opt_cfg)
+        g, _ = _gnn_batch_abstract(c, s, regression=regression)
+        return (abstract_params(sch), state_abs, {"graph": g}, _sds((), I32))
+
+    def arg_axes(cfg, opt_cfg):
+        c = adapt(cfg)
+        sch = gnn_lib.gnn_schema(c)
+        _, state_axes = opt_abstract_and_axes(sch, opt_cfg)
+        _, ax = _gnn_batch_abstract(c, s, regression=regression)
+        return (schema_axes(sch), state_axes, {"graph": ax}, ())
+
+    return CellDef(entry.arch_id, shape_id, "train", fn, abstract_args, arg_axes, donate=(0, 1))
+
+
+# ---------------------------------------------------------------- recsys
+REC_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieve", batch=1, n_candidates=1_000_000),
+}
+
+
+def recsys_cell(entry: ArchEntry, shape_id: str) -> CellDef:
+    s = REC_SHAPES[shape_id]
+    kind = s["kind"]
+
+    def ids_abs(cfg, b):
+        return (
+            _sds((b, cfg.n_sparse, cfg.bag_size), I32),
+            _sds((b, cfg.n_sparse, cfg.bag_size), BOOL),
+        )
+
+    ids_ax = (("batch", "field", None), ("batch", "field", None))
+
+    if kind == "train":
+        def fn(cfg, opt_cfg):
+            return make_train_step(cfg, opt_cfg)
+
+        def abstract_args(cfg, opt_cfg):
+            sch = recsys_lib.recsys_schema(cfg)
+            state_abs, _ = opt_abstract_and_axes(sch, opt_cfg)
+            ids, mask = ids_abs(cfg, s["batch"])
+            return (
+                abstract_params(sch),
+                state_abs,
+                {"ids": ids, "bag_mask": mask, "labels": _sds((s["batch"],), I32)},
+                _sds((), I32),
+            )
+
+        def arg_axes(cfg, opt_cfg):
+            sch = recsys_lib.recsys_schema(cfg)
+            _, state_axes = opt_abstract_and_axes(sch, opt_cfg)
+            return (
+                schema_axes(sch),
+                state_axes,
+                {"ids": ids_ax[0], "bag_mask": ids_ax[1], "labels": ("batch",)},
+                (),
+            )
+
+        return CellDef(entry.arch_id, shape_id, kind, fn, abstract_args, arg_axes, donate=(0, 1))
+
+    if kind == "serve":
+        def fn(cfg, opt_cfg):
+            return lambda params, ids, mask: recsys_lib.forward(cfg, params, ids, mask)
+
+        def abstract_args(cfg, opt_cfg):
+            ids, mask = ids_abs(cfg, s["batch"])
+            return (abstract_params(recsys_lib.recsys_schema(cfg)), ids, mask)
+
+        def arg_axes(cfg, opt_cfg):
+            return (schema_axes(recsys_lib.recsys_schema(cfg)),) + ids_ax
+
+        return CellDef(entry.arch_id, shape_id, kind, fn, abstract_args, arg_axes)
+
+    # retrieval
+    def fn(cfg, opt_cfg):
+        return lambda params, ids, mask, cand: recsys_lib.retrieval_score(
+            cfg, params, ids, mask, cand
+        )
+
+    def abstract_args(cfg, opt_cfg):
+        ids, mask = ids_abs(cfg, 1)
+        return (
+            abstract_params(recsys_lib.recsys_schema(cfg)),
+            ids,
+            mask,
+            _sds((_pad(s["n_candidates"]),), I32),
+        )
+
+    def arg_axes(cfg, opt_cfg):
+        return (
+            schema_axes(recsys_lib.recsys_schema(cfg)),
+            (None, "field", None),
+            (None, "field", None),
+            ("candidates",),
+        )
+
+    return CellDef(entry.arch_id, shape_id, kind, fn, abstract_args, arg_axes)
+
+
+# --------------------------------------------------------------- registry
+def build_cell(entry: ArchEntry, shape_id: str) -> CellDef:
+    if entry.family == "lm":
+        return lm_cell(entry, shape_id)
+    if entry.family == "gnn":
+        return gnn_cell(entry, shape_id)
+    if entry.family == "recsys":
+        return recsys_cell(entry, shape_id)
+    raise ValueError(entry.family)
+
+
+def all_cells() -> list[CellDef]:
+    from repro.configs import all_archs
+
+    cells = []
+    for entry in all_archs().values():
+        if entry.family in ("lm", "gnn", "recsys"):
+            for sh in entry.shapes:
+                cells.append(build_cell(entry, sh))
+    return cells

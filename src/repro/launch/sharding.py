@@ -1,0 +1,137 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates activations with *logical* axis names
+(``logical(x, "batch", "seq", "embed")``); a rule set maps logical names to
+mesh axes per (arch family × shape kind). Params carry logical axes in their
+schema (see models/schema.py) and get their NamedSharding the same way.
+
+Outside a rules context everything is a no-op, so single-device smoke tests
+never touch sharding machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> dict[str, tuple[str, ...] | str | None] | None:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: dict[str, tuple[str, ...] | str | None]):
+    """Activate a logical→mesh axis mapping (and its mesh)."""
+    old_rules = getattr(_state, "rules", None)
+    old_mesh = getattr(_state, "mesh", None)
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = old_rules, old_mesh
+
+
+def spec_for(axes: tuple[str | None, ...]) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules."""
+    rules = current_rules()
+    if rules is None:
+        return P()
+    out = []
+    used: set[str] = set()
+    for name in axes:
+        m = rules.get(name) if name is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        ms = tuple(a for a in ms if a not in used)
+        used.update(ms)
+        if not ms:
+            out.append(None)  # all mesh axes already consumed by earlier dims
+        else:
+            out.append(ms if len(ms) != 1 else ms[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def logical(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain an activation's sharding by logical axis names (no-op
+    without active rules)."""
+    mesh = current_mesh()
+    if mesh is None or current_rules() is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(axes))
+    )
+
+
+def named_sharding(axes: tuple[str | None, ...]) -> NamedSharding | None:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(axes))
+
+
+# ---------------------------------------------------------------- rule sets
+def lm_rules(kind: str) -> dict:
+    """kind: train | prefill | decode.
+
+    data-parallel/FSDP over (pod, data); tensor-parallel over model.
+    Sequence (context) parallelism shards long sequences over `data` in
+    prefill. Experts shard over `model` (EP).
+    """
+    base = {
+        "batch": ("pod", "data"),
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "qkv": None,
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_mlp": None,
+        "fsdp": ("pod", "data"),     # param sharding axis (ZeRO-3 style)
+        "seq": None,
+        "kv_seq": None,
+        "lora": None,
+    }
+    if kind == "prefill":
+        base["seq"] = ("pod", "data")   # sequence parallelism
+        base["batch"] = None
+    if kind == "decode":
+        base["kv_seq"] = None
+    return base
+
+
+def gnn_rules(kind: str) -> dict:
+    return {
+        "graph_batch": ("pod", "data"),
+        "nodes": ("pod", "data"),
+        "edges": ("pod", "data"),
+        "feat": None,
+        "hidden": "model",
+        "fsdp": None,
+        "classes": None,
+    }
+
+
+def recsys_rules(kind: str) -> dict:
+    return {
+        "batch": ("pod", "data"),
+        "field": None,
+        "rows": ("pod", "data", "model") if kind != "train" else ("model",),
+        "embed": None,
+        "mlp": "model",
+        "cin": "model",
+        "candidates": ("pod", "data", "model"),
+        "fsdp": None,
+    }

@@ -1,0 +1,235 @@
+"""GNN model zoo: GatedGCN, EGNN, GIN-ε, MeshGraphNet.
+
+Message passing is implemented exactly as the brief requires for JAX:
+``jax.ops.segment_sum`` (+max) over an edge-index → node scatter. The graphs
+come from ``repro.graphstore`` (same partitioned substrate as the matching
+engine); padded edges carry ``edge_mask``.
+
+Batch layout (static shapes):
+  node_feat (N, d_in) · node_pos (N, 3, EGNN) · edge_src/dst (E,) int32
+  edge_feat (E, d_e) · node_mask (N,) · edge_mask (E,) · graph_id (N,)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.launch.sharding import logical
+from repro.models.layers import maybe_scan
+from repro.models.schema import ParamDef, init_params
+
+
+class GraphBatch(NamedTuple):
+    node_feat: jnp.ndarray
+    edge_src: jnp.ndarray
+    edge_dst: jnp.ndarray
+    node_mask: jnp.ndarray
+    edge_mask: jnp.ndarray
+    edge_feat: jnp.ndarray | None = None
+    node_pos: jnp.ndarray | None = None
+    graph_id: jnp.ndarray | None = None
+    n_graphs: int = 1
+    labels: jnp.ndarray | None = None
+    label_mask: jnp.ndarray | None = None
+
+
+def _mlp_def(d_in: int, d_hidden: int, d_out: int, n: int, prefix_dims=None):
+    """Schema for an n-layer MLP, optionally stacked over leading dims."""
+    pd = tuple(prefix_dims or ())
+    pax = ("layer",) * len(pd)
+    sch = {}
+    dims = [d_in] + [d_hidden] * (n - 1) + [d_out]
+    for i in range(n):
+        sch[f"w{i}"] = ParamDef(pd + (dims[i], dims[i + 1]), pax + (None, "hidden"), "he")
+        sch[f"b{i}"] = ParamDef(pd + (dims[i + 1],), pax + ("hidden",), "zeros")
+    return sch
+
+
+def _mlp(params, x, n, act=jax.nn.relu):
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = act(x)
+    return x
+
+
+def _seg_sum(data, idx, n):
+    return jax.ops.segment_sum(data, idx, num_segments=n)
+
+
+# ------------------------------------------------------------------ schema
+def gnn_schema(cfg: GNNConfig) -> dict:
+    L, dh = cfg.n_layers, cfg.d_hidden
+    sch: dict = {
+        "enc_node": _mlp_def(cfg.d_in, dh, dh, 2),
+        "head": _mlp_def(dh, dh, cfg.n_classes, 2),
+    }
+    if cfg.kind == "gin":
+        sch["layers"] = {
+            **_mlp_def(dh, dh, dh, 2, prefix_dims=(L,)),
+        }
+        if cfg.learnable_eps:
+            sch["eps"] = ParamDef((L,), ("layer",), "zeros")
+    elif cfg.kind == "gatedgcn":
+        sch["enc_edge"] = _mlp_def(max(cfg.d_edge, 1), dh, dh, 1)
+        sch["layers"] = {
+            "A": ParamDef((L, dh, dh), ("layer", None, "hidden"), "he"),
+            "B": ParamDef((L, dh, dh), ("layer", None, "hidden"), "he"),
+            "C": ParamDef((L, dh, dh), ("layer", None, "hidden"), "he"),
+            "U": ParamDef((L, dh, dh), ("layer", None, "hidden"), "he"),
+            "V": ParamDef((L, dh, dh), ("layer", None, "hidden"), "he"),
+            "norm_h": ParamDef((L, dh), ("layer", None), "zeros"),
+            "norm_e": ParamDef((L, dh), ("layer", None), "zeros"),
+        }
+    elif cfg.kind == "egnn":
+        sch["layers"] = {
+            "phi_e": _mlp_def(2 * dh + 1 + (cfg.d_edge or 0), dh, dh, 2),
+            "phi_x": _mlp_def(dh, dh, 1, 2),
+            "phi_h": _mlp_def(2 * dh, dh, dh, 2),
+        }
+        # EGNN layers stacked:
+        sch["layers"] = {
+            k: {
+                kk: ParamDef((L,) + d.shape, ("layer",) + d.axes, d.init)
+                for kk, d in v.items()
+            }
+            for k, v in sch["layers"].items()
+        }
+    elif cfg.kind == "meshgraphnet":
+        sch["enc_edge"] = _mlp_def(max(cfg.d_edge, 1), dh, dh, cfg.mlp_layers)
+        mk = lambda din: {
+            kk: ParamDef((L,) + d.shape, ("layer",) + d.axes, d.init)
+            for kk, d in _mlp_def(din, dh, dh, cfg.mlp_layers).items()
+        }
+        sch["layers"] = {
+            "edge_mlp": mk(3 * dh),
+            "node_mlp": mk(2 * dh),
+        }
+    else:
+        raise ValueError(cfg.kind)
+    return sch
+
+
+# ---------------------------------------------------------------- forward
+def forward(cfg: GNNConfig, params: dict, g: GraphBatch) -> jnp.ndarray:
+    N = g.node_feat.shape[0]
+    dh = cfg.d_hidden
+    em = g.edge_mask[:, None].astype(g.node_feat.dtype)
+    h = _mlp(params["enc_node"], g.node_feat, 2)
+    h = logical(h, "nodes", "hidden")
+
+    if cfg.kind == "gin":
+        def body(h, pl):
+            agg = _seg_sum(h[g.edge_src] * em, g.edge_dst, N)
+            eps = pl.get("eps", jnp.zeros(()))
+            out = _mlp(pl, (1.0 + eps) * h + agg, 2)
+            return jax.nn.relu(out), None
+
+        stack = dict(params["layers"])
+        if cfg.learnable_eps:
+            stack["eps"] = params["eps"]
+        h, _ = maybe_scan(body, h, stack)
+
+    elif cfg.kind == "gatedgcn":
+        ef = g.edge_feat
+        if ef is None:
+            ef = jnp.ones((g.edge_src.shape[0], 1), h.dtype)
+        e = _mlp(params["enc_edge"], ef, 1)
+
+        def body(carry, pl):
+            h, e = carry
+            hs, hd = h[g.edge_src], h[g.edge_dst]
+            e_new = hd @ pl["A"] + hs @ pl["B"] + e @ pl["C"]
+            e = _ln(e + jax.nn.relu(e_new), pl["norm_e"])
+            gate = jax.nn.sigmoid(e) * em
+            denom = _seg_sum(gate, g.edge_dst, N) + 1e-6
+            msg = _seg_sum(gate * (hs @ pl["V"]), g.edge_dst, N) / denom
+            h = _ln(h + jax.nn.relu(h @ pl["U"] + msg), pl["norm_h"])
+            return (h, e), None
+
+        (h, _), _ = maybe_scan(body, (h, e), params["layers"])
+
+    elif cfg.kind == "egnn":
+        x = g.node_pos
+        assert x is not None, "EGNN requires node_pos"
+
+        def body(carry, pl):
+            h, x = carry
+            xs, xd = x[g.edge_src], x[g.edge_dst]
+            d2 = jnp.sum((xd - xs) ** 2, axis=-1, keepdims=True)
+            inp = [h[g.edge_dst], h[g.edge_src], d2]
+            if g.edge_feat is not None and cfg.d_edge:
+                inp.append(g.edge_feat)
+            m = _mlp(pl["phi_e"], jnp.concatenate(inp, -1), 2)
+            m = jax.nn.silu(m) * em
+            w = _mlp(pl["phi_x"], m, 2)                       # (E, 1)
+            deg = _seg_sum(em, g.edge_dst, N) + 1.0
+            x = x + _seg_sum((xd - xs) * w * em, g.edge_dst, N) / deg
+            agg = _seg_sum(m, g.edge_dst, N)
+            h = h + _mlp(pl["phi_h"], jnp.concatenate([h, agg], -1), 2)
+            return (h, x), None
+
+        (h, _), _ = maybe_scan(body, (h, x), params["layers"])
+
+    elif cfg.kind == "meshgraphnet":
+        ef = g.edge_feat
+        if ef is None:
+            ef = jnp.ones((g.edge_src.shape[0], 1), h.dtype)
+        e = _mlp(params["enc_edge"], ef, cfg.mlp_layers)
+
+        def body(carry, pl):
+            h, e = carry
+            e = e + _mlp(
+                pl["edge_mlp"],
+                jnp.concatenate([e, h[g.edge_src], h[g.edge_dst]], -1),
+                cfg.mlp_layers,
+            )
+            agg = _seg_sum(e * em, g.edge_dst, N)
+            h = h + _mlp(pl["node_mlp"], jnp.concatenate([h, agg], -1), cfg.mlp_layers)
+            return (h, e), None
+
+        (h, _), _ = maybe_scan(body, (h, e), params["layers"])
+
+    h = logical(h, "nodes", "hidden")
+    if cfg.task == "graph":
+        # n_graphs must be static under jit: derive from the labels shape
+        G = g.labels.shape[0] if g.labels is not None else int(g.n_graphs)
+        gid = g.graph_id if g.graph_id is not None else jnp.zeros((N,), jnp.int32)
+        pooled = _seg_sum(h * g.node_mask[:, None], gid, G)
+        cnt = _seg_sum(g.node_mask.astype(h.dtype), gid, G)[:, None]
+        return _mlp(params["head"], pooled / jnp.maximum(cnt, 1.0), 2)
+    return _mlp(params["head"], h, 2)
+
+
+def _ln(x, scale):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-5) * (1.0 + scale)
+
+
+def loss_fn(cfg: GNNConfig, params: dict, g: GraphBatch) -> jnp.ndarray:
+    out = forward(cfg, params, g)
+    float_labels = g.labels is not None and jnp.issubdtype(
+        g.labels.dtype, jnp.floating
+    )
+    if cfg.task == "graph":
+        if float_labels:  # graph-level regression (MeshGraphNet × molecule)
+            return jnp.mean((out[..., 0] - g.labels.astype(out.dtype)) ** 2)
+        lp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, g.labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(nll)
+    if cfg.task == "regression" or float_labels:
+        tgt = g.labels.astype(out.dtype)
+        mask = (g.label_mask if g.label_mask is not None else g.node_mask).astype(out.dtype)
+        return jnp.sum(((out[..., 0] - tgt) ** 2) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    lp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, g.labels[:, None], axis=-1)[:, 0]
+    mask = (g.label_mask if g.label_mask is not None else g.node_mask).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def init(cfg: GNNConfig, key: jax.Array) -> dict:
+    return init_params(gnn_schema(cfg), key)

@@ -1,0 +1,280 @@
+"""Shared transformer layers (pure JAX, schema-based params).
+
+Conventions:
+  activations bf16 (configurable), softmax/norm statistics in f32;
+  masks are never materialized at (Sq, Skv) scale — they are built per tile
+  from positions, and sequences beyond ``_NAIVE_LIMIT`` run through an
+  online-softmax chunked attention (the pure-jnp flash-attention: also the
+  oracle for the Pallas ``flash_attention`` kernel); KV caches are
+  [B, S_cap, N_kv, H].
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.sharding import logical
+
+_NAIVE_LIMIT = 2048 * 2048  # Sq*Skv above this → chunked path
+
+# Dry-run cost analysis counts lax.scan/map/while bodies ONCE regardless of
+# trip count; under ``unrolled_model()`` every structural loop (layer stacks,
+# attention tiles) unrolls to plain Python so the (small-depth) cost probes
+# in launch/dryrun.py report exact per-layer FLOPs/bytes/collectives.
+_UNROLL = contextvars.ContextVar("unroll_model", default=False)
+
+
+@contextlib.contextmanager
+def unrolled_model():
+    tok = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+def maybe_scan(body, carry, xs):
+    """lax.scan, or an unrolled Python loop under ``unrolled_model()``."""
+    if not _UNROLL.get():
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *z: jnp.stack(z), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * (1.0 + scale.astype(dt))
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(d: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d, 2, dtype=np.float64) / d))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, N, H); positions: (..., S). Llama convention (half split)."""
+    H = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(H, theta), dtype=jnp.float32)  # (H/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, H/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+def _tile_mask(pos_q, pos_k, window):
+    """(.., Sq, Skv) bool from positions; pos_k < 0 marks invalid slots."""
+    ok = (pos_k[..., None, :] <= pos_q[..., :, None]) & (pos_k[..., None, :] >= 0)
+    if window is not None:
+        ok &= pos_k[..., None, :] > pos_q[..., :, None] - window
+    return ok
+
+
+def _logits_tile(qg, k, scale, softcap):
+    # qg: (B, Sq, Nkv, G, H); k: (B, Skv, Nkv, H) → (B, Nkv, G, Sq, Skv) f32
+    logits = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    )
+    logits *= scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def attention(
+    q: jnp.ndarray,       # (B, Sq, Nq, H)
+    k: jnp.ndarray,       # (B, Skv, Nkv, H)
+    v: jnp.ndarray,       # (B, Skv, Nkv, Hv)
+    pos_q: jnp.ndarray,   # (Sq,) int32 query positions
+    pos_k: jnp.ndarray,   # (Skv,) int32 key positions (-1 = invalid slot)
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 2048,
+) -> jnp.ndarray:
+    """Grouped-query attention, causal w/ optional sliding window.
+    Dispatches to an online-softmax chunked path for long sequences."""
+    B, Sq, Nq, H = q.shape
+    Skv, Nkv = k.shape[1], k.shape[2]
+    G = Nq // Nkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(H)
+    qg = q.reshape(B, Sq, Nkv, G, H)
+
+    if Sq * Skv <= _NAIVE_LIMIT:
+        logits = _logits_tile(qg, k, scale, softcap)
+        mask = _tile_mask(pos_q, pos_k, window)  # (Sq, Skv)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+        return out.reshape(B, Sq, Nq, v.shape[-1]).astype(q.dtype)
+
+    # ---------------- chunked (flash-style) path ---------------------------
+    Hv = v.shape[-1]
+    qc = min(q_chunk, Sq)
+    while Sq % qc:
+        qc //= 2
+    kc = min(kv_chunk, Skv)
+    while Skv % kc:
+        kc //= 2
+    nq, nk = Sq // qc, Skv // kc
+
+    q_t = qg.reshape(B, nq, qc, Nkv, G, H).transpose(1, 0, 2, 3, 4, 5)
+    pos_q_t = pos_q.reshape(nq, qc)
+    k_t = k.reshape(B, nk, kc, Nkv, H).transpose(1, 0, 2, 3, 4)
+    v_t = v.reshape(B, nk, kc, Nkv, Hv).transpose(1, 0, 2, 3, 4)
+    pos_k_t = pos_k.reshape(nk, kc)
+
+    def q_block(args):
+        qb, pq = args  # (B, qc, Nkv, G, H), (qc,)
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kb, vb, pk = xs
+            logits = _logits_tile(qb, kb, scale, softcap)  # (B,Nkv,G,qc,kc)
+            mask = _tile_mask(pq, pk, window)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p, vb.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Nkv, G, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Nkv, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Nkv, G, qc, Hv), jnp.float32)
+        if _UNROLL.get():
+            carry = (m0, l0, a0)
+            for j in range(nk):
+                carry, _ = kv_step(carry, (k_t[j], v_t[j], pos_k_t[j]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), (k_t, v_t, pos_k_t)
+            )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)  # (B, qc, Nkv, G, Hv)
+
+    if _UNROLL.get():
+        out = jnp.stack([q_block((q_t[i], pos_q_t[i])) for i in range(nq)])
+    else:
+        out = jax.lax.map(q_block, (q_t, pos_q_t))  # (nq, B, qc, Nkv, G, Hv)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Nq, Hv)
+    return out.astype(q.dtype)
+
+
+def blocked_decode_attention(
+    q: jnp.ndarray,       # (B, 1, Nq, H)
+    k_cache: jnp.ndarray,  # (B, S, Nkv, H) — S sharded over the mesh
+    v_cache: jnp.ndarray,
+    pos_q: jnp.ndarray,   # (1,)
+    pos_k: jnp.ndarray,   # (S,)
+    n_blocks: int,
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Flash-decoding (split-KV) for one-token decode: per-block softmax
+    stats (m, l, acc) computed block-locally, combined across blocks — the
+    cross-shard traffic is O(B·N·(Hv+2)·n_blocks) stats instead of the whole
+    KV cache (§Perf iteration 2)."""
+    B, S, Nkv, H = k_cache.shape
+    Nq = q.shape[2]
+    G = Nq // Nkv
+    Hv = v_cache.shape[-1]
+    Sb = S // n_blocks
+    scale = scale if scale is not None else 1.0 / np.sqrt(H)
+
+    kb = logical(
+        k_cache.reshape(B, n_blocks, Sb, Nkv, H),
+        "batch", "kv_block", None, "kv_heads", None,
+    )
+    vb = logical(
+        v_cache.reshape(B, n_blocks, Sb, Nkv, Hv),
+        "batch", "kv_block", None, "kv_heads", None,
+    )
+    pos_kb = pos_k.reshape(n_blocks, Sb)
+    # replicate q across the model axis (a few MB) so every shard scores its
+    # own KV blocks locally — resharding activations, never weights
+    qg = logical(q.reshape(B, Nkv, G, H), "batch", None, None, None)
+
+    logits = jnp.einsum(
+        "bkgh,bnskh->bnkgs", qg.astype(jnp.float32), kb.astype(jnp.float32)
+    ) * scale  # (B, nb, Nkv, G, Sb)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    ok = (pos_kb <= pos_q[0]) & (pos_kb >= 0)
+    if window is not None:
+        ok &= pos_kb > pos_q[0] - window
+    logits = jnp.where(ok[None, :, None, None, :], logits, -1e30)
+    logits = logical(logits, "batch", "kv_block", "kv_heads", None, None)
+
+    m_b = jnp.max(logits, axis=-1)                      # (B, nb, Nkv, G)
+    p = jnp.exp(logits - m_b[..., None])
+    l_b = jnp.sum(p, axis=-1)
+    acc_b = jnp.einsum("bnkgs,bnskh->bnkgh", p, vb.astype(jnp.float32))
+    # combine across blocks (the only cross-shard reduction)
+    m = jnp.max(m_b, axis=1)                            # (B, Nkv, G)
+    corr = jnp.exp(m_b - m[:, None])
+    l = jnp.sum(l_b * corr, axis=1)
+    acc = jnp.sum(acc_b * corr[..., None], axis=1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, 1, Nq, Hv).astype(q.dtype)
+
+
+def causal_mask(q_len: int, kv_len: int, *, window: int | None = None) -> jnp.ndarray:
+    """Additive small-scale mask (tests / reference only)."""
+    qi = jnp.arange(q_len)[:, None] + (kv_len - q_len)
+    kj = jnp.arange(kv_len)[None, :]
+    ok = kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+# ------------------------------------------------------------------- MLPs
+def glu_mlp(x: jnp.ndarray, wi_gate, wi_up, wo, act: str) -> jnp.ndarray:
+    g = x @ wi_gate
+    u = x @ wi_up
+    if act == "swiglu":
+        h = jax.nn.silu(g) * u
+    elif act == "geglu":
+        h = jax.nn.gelu(g, approximate=True) * u
+    else:
+        raise ValueError(act)
+    h = logical(h, "batch", "seq", "mlp")
+    return h @ wo
+
+
+def dense_mlp(x: jnp.ndarray, wi, wo, act: str = "gelu") -> jnp.ndarray:
+    h = jax.nn.gelu(x @ wi) if act == "gelu" else jax.nn.relu(x @ wi)
+    return h @ wo
+
+
+def mlp_stack(x: jnp.ndarray, params: dict, n: int, act=jax.nn.relu) -> jnp.ndarray:
+    """Small n-layer MLP used by GNN/recsys models: params w0,b0,..wk,bk."""
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = act(x)
+    return x

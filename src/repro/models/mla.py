@@ -1,0 +1,134 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2405.04434 / 2412.19437).
+
+Queries are low-rank compressed (q_lora); keys/values share one latent
+c_kv (kv_lora) plus a decoupled shared RoPE key (d_rope). The decode path
+uses the *absorbed* formulation: scores and values are computed directly in
+latent space, so the KV cache is (kv_lora + d_rope) per token — the reason
+long_500k decode is feasible for this arch (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models.layers import apply_rope, attention, rms_norm
+from repro.models.schema import ParamDef
+
+
+def mla_schema(cfg: LMConfig) -> dict:
+    m = cfg.mla
+    L, D, N = cfg.n_layers, cfg.d_model, cfg.n_heads
+    dt = cfg.dtype
+    return {
+        "wq_a": ParamDef((L, D, m.q_lora_rank), ("layer", "fsdp", "lora"), "lecun", dt),
+        "q_norm": ParamDef((L, m.q_lora_rank), ("layer", None), "zeros", "float32"),
+        "wq_b": ParamDef(
+            (L, m.q_lora_rank, N, m.d_nope + m.d_rope),
+            ("layer", "lora", "heads", None),
+            "lecun",
+            dt,
+        ),
+        "wkv_a": ParamDef(
+            (L, D, m.kv_lora_rank + m.d_rope), ("layer", "fsdp", None), "lecun", dt
+        ),
+        "kv_norm": ParamDef((L, m.kv_lora_rank), ("layer", None), "zeros", "float32"),
+        "wk_b": ParamDef(
+            (L, m.kv_lora_rank, N, m.d_nope),
+            ("layer", "lora", "heads", None),
+            "lecun",
+            dt,
+        ),
+        "wv_b": ParamDef(
+            (L, m.kv_lora_rank, N, m.d_v),
+            ("layer", "lora", "heads", None),
+            "lecun",
+            dt,
+        ),
+        "wo": ParamDef(
+            (L, N, m.d_v, D), ("layer", "heads", None, "fsdp"), "lecun", dt
+        ),
+    }
+
+
+def _project_q(p, x, cfg: LMConfig, positions):
+    m = cfg.mla
+    q_lat = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsl,lnh->bsnh", q_lat, p["wq_b"])  # (B,S,N,dn+dr)
+    q_nope, q_rope = q[..., : m.d_nope], q[..., m.d_nope :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, x, cfg: LMConfig, positions):
+    m = cfg.mla
+    kv = x @ p["wkv_a"]  # (B,S,kv_lora + dr)
+    c_kv = rms_norm(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank :][:, :, None, :]  # (B,S,1,dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_attention(
+    p: dict,                 # this layer's slice of mla_schema params
+    x: jnp.ndarray,          # (B, S, D)
+    pos: jnp.ndarray,        # (S,) int32
+    cfg: LMConfig,
+):
+    """Training / prefill path: materialize per-head K (nope‖rope) and V from
+    the latent, then run the shared (chunked) attention core."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(pos, (B, S))
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    c_kv, k_rope = _project_kv_latent(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsl,lnh->bsnh", c_kv, p["wk_b"])
+    v = jnp.einsum("bsl,lnh->bsnh", c_kv, p["wv_b"])
+
+    N = cfg.n_heads
+    q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)  # (B,S,N,dn+dr)
+    k_eff = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, N, m.d_rope))],
+        axis=-1,
+    )
+    scale = 1.0 / np.sqrt(m.d_nope + m.d_rope)
+    out = attention(q_eff, k_eff, v, pos, pos, scale=scale)
+    return jnp.einsum("bqnh,nhd->bqd", out, p["wo"]), (c_kv, k_rope)
+
+
+def mla_decode(
+    p: dict,
+    x: jnp.ndarray,          # (B, 1, D)
+    pos: jnp.ndarray,        # () current position (== slot; non-rolling)
+    cache_ckv: jnp.ndarray,  # (B, S_cap, kv_lora)
+    cache_kr: jnp.ndarray,   # (B, S_cap, d_rope)
+    cfg: LMConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Absorbed decode: O(S · (kv_lora + d_rope)) per step."""
+    m = cfg.mla
+    B = x.shape[0]
+    S_cap = cache_ckv.shape[1]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _project_q(p, x, cfg, positions)      # (B,1,N,·)
+    c_kv_new, k_rope_new = _project_kv_latent(p, x, cfg, positions)
+    cache_ckv = jax.lax.dynamic_update_slice(
+        cache_ckv, c_kv_new.astype(cache_ckv.dtype), (0, pos, 0)
+    )
+    cache_kr = jax.lax.dynamic_update_slice(
+        cache_kr, k_rope_new.astype(cache_kr.dtype), (0, pos, 0)
+    )
+
+    # absorb: q_eff[b,n,l] = q_nope · wk_b — scores in latent space
+    q_eff = jnp.einsum("bqnh,lnh->bqnl", q_nope, p["wk_b"])  # (B,1,N,kv_lora)
+    scale = 1.0 / np.sqrt(m.d_nope + m.d_rope)
+    logits = (
+        jnp.einsum("bqnl,bsl->bnqs", q_eff.astype(jnp.float32), cache_ckv.astype(jnp.float32))
+        + jnp.einsum("bqnh,bsh->bnqs", q_rope.astype(jnp.float32), cache_kr.astype(jnp.float32))
+    ) * scale
+    valid = (jnp.arange(S_cap) <= pos)[None, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bnqs,bsl->bqnl", probs, cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bqnl,lnh->bqnh", o_lat.astype(x.dtype), p["wv_b"])
+    return jnp.einsum("bqnh,nhd->bqd", out, p["wo"]), cache_ckv, cache_kr

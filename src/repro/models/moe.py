@@ -1,0 +1,244 @@
+"""Mixture-of-Experts FFN with static-shape sort-based dispatch.
+
+Routing variants:
+  * softmax top-k, renormalized over the chosen experts  (Mixtral)
+  * sigmoid scores + aux-loss-free bias balancing + group-limited top-k,
+    normalized over chosen                                (DeepSeek-V3)
+
+Dispatch: flatten (token, k) assignments, sort by expert id, pack each
+expert's tokens into a capacity-bounded (E, C, D) buffer (dropped tokens fall
+back to the residual path — standard capacity-factor semantics), run the
+expert GEMMs batched over E, scatter-add back with combine weights. All
+shapes static; the E axis shards over the `model` mesh axis (expert
+parallelism) and XLA inserts the dispatch all-to-alls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.launch.sharding import logical
+from repro.models.schema import ParamDef
+
+
+def moe_schema(cfg: MoEConfig, n_layers: int, d_model: int, dtype: str) -> dict:
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    L = n_layers
+    sch = {
+        "router": ParamDef((L, d_model, e), ("layer", "embed", "expert"), "lecun", "float32"),
+        "wi_gate": ParamDef((L, e, d_model, f), ("layer", "expert", "fsdp", "expert_mlp"), "lecun", dtype),
+        "wi_up": ParamDef((L, e, d_model, f), ("layer", "expert", "fsdp", "expert_mlp"), "lecun", dtype),
+        "wo": ParamDef((L, e, f, d_model), ("layer", "expert", "expert_mlp", "fsdp"), "lecun", dtype),
+    }
+    if cfg.router_bias_balancing:
+        sch["router_bias"] = ParamDef((L, e), ("layer", "expert"), "zeros", "float32")
+    if cfg.n_shared:
+        fs = f * cfg.n_shared
+        sch["shared_wi_gate"] = ParamDef((L, d_model, fs), ("layer", "fsdp", "mlp"), "lecun", dtype)
+        sch["shared_wi_up"] = ParamDef((L, d_model, fs), ("layer", "fsdp", "mlp"), "lecun", dtype)
+        sch["shared_wo"] = ParamDef((L, fs, d_model), ("layer", "mlp", "fsdp"), "lecun", dtype)
+    return sch
+
+
+def route(
+    x: jnp.ndarray,              # (T, D)
+    w_router: jnp.ndarray,       # (D, E)
+    bias: jnp.ndarray | None,    # (E,) balancing bias (DSv3) or None
+    cfg: MoEConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (expert_idx (T, K), combine_weights (T, K), aux_loss ())."""
+    logits = x.astype(jnp.float32) @ w_router.astype(jnp.float32)  # (T, E)
+    if cfg.router == "softmax":
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+        w = w / jnp.sum(w, axis=-1, keepdims=True)
+    elif cfg.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + (bias[None, :] if bias is not None else 0.0)
+        if cfg.n_groups > 1:
+            T = x.shape[0]
+            g = sel.reshape(T, cfg.n_groups, -1)
+            # group score = sum of top-2 affinities in the group (DSv3)
+            g2 = jnp.sum(jax.lax.top_k(g, 2)[0], axis=-1)       # (T, G)
+            _, gidx = jax.lax.top_k(g2, cfg.top_groups)
+            gmask = jnp.zeros_like(g2).at[
+                jnp.arange(T)[:, None], gidx
+            ].set(1.0)
+            sel = jnp.where(
+                jnp.repeat(gmask, sel.shape[-1] // cfg.n_groups, axis=-1) > 0,
+                sel,
+                -jnp.inf,
+            )
+        _, idx = jax.lax.top_k(sel, cfg.top_k)
+        w = jnp.take_along_axis(scores, idx, axis=-1)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-20)
+    else:
+        raise ValueError(cfg.router)
+    aux = jnp.float32(0.0)
+    if cfg.aux_loss_weight > 0:
+        # Switch-style load-balance loss
+        E = logits.shape[-1]
+        probs = jax.nn.softmax(logits, axis=-1)
+        hot = jnp.zeros_like(probs).at[
+            jnp.arange(x.shape[0])[:, None], idx
+        ].add(1.0)
+        frac = jnp.mean(hot, axis=0)
+        imp = jnp.mean(probs, axis=0)
+        aux = cfg.aux_loss_weight * E * jnp.sum(frac * imp)
+    return idx.astype(jnp.int32), w.astype(jnp.float32), aux
+
+
+def moe_ffn(
+    x: jnp.ndarray,              # (T, D)
+    layer_params: dict,          # this layer's slice of moe_schema params
+    cfg: MoEConfig,
+    act: str = "swiglu",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out (T, D), aux_loss)."""
+    if cfg.dispatch_groups > 1 and x.shape[0] % cfg.dispatch_groups == 0:
+        return _moe_ffn_grouped(x, layer_params, cfg, act)
+    return _moe_ffn_global(x, layer_params, cfg, act)
+
+
+def _moe_ffn_global(x, layer_params, cfg, act):
+    """Paper-faithful baseline: one global sort-dispatch over all tokens.
+    Under SPMD this all-gathers activations for the permutation gather —
+    the dominant collective term in the MoE dry-runs (EXPERIMENTS.md §Perf
+    iteration 1 replaces it with the grouped dispatch below)."""
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    # capacity-factor bound, with a small-batch no-drop floor (decode batches
+    # must never drop tokens: C >= T guarantees it and is cheap when T <= 64)
+    C = max(1, int(np.ceil(T * K / E * cfg.capacity_factor)), min(T, 64))
+    bias = layer_params.get("router_bias")
+    idx, w, aux = route(x, layer_params["router"], bias, cfg)
+
+    # ---- sort-based dispatch -------------------------------------------
+    flat_e = idx.reshape(-1)                       # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_w = w.reshape(-1)
+    order = jnp.argsort(flat_e)                    # stable
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # rank within expert = position - first position of that expert
+    pos = jnp.arange(T * K, dtype=jnp.int32)
+    first = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype)).astype(jnp.int32)
+    rank = pos - first[se]
+    keep = rank < C
+    buf_e = jnp.where(keep, se, E)
+    buf_r = jnp.where(keep, rank, C)
+
+    xb = jnp.zeros((E + 1, C + 1, D), x.dtype)
+    xb = xb.at[buf_e, buf_r].set(x[st], mode="drop")
+    xb = xb[:E, :C]
+    xb = logical(xb, "expert", "expert_capacity", None)
+
+    # ---- expert GEMMs ----------------------------------------------------
+    wi_g, wi_u, wo = (
+        layer_params["wi_gate"],
+        layer_params["wi_up"],
+        layer_params["wo"],
+    )
+    g = jnp.einsum("ecd,edf->ecf", xb, wi_g)
+    u = jnp.einsum("ecd,edf->ecf", xb, wi_u)
+    h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)) * u
+    h = logical(h, "expert", "expert_capacity", "expert_mlp")
+    yb = jnp.einsum("ecf,efd->ecd", h, wo)
+    yb = logical(yb, "expert", "expert_capacity", None)
+
+    # ---- combine ---------------------------------------------------------
+    contrib = yb[buf_e.clip(0, E - 1), buf_r.clip(0, C - 1)]  # (T*K, D)
+    contrib = jnp.where(keep[:, None], contrib, 0.0)
+    out = jnp.zeros((T, D), x.dtype).at[st].add(
+        contrib * sw[:, None].astype(x.dtype)
+    )
+
+    # ---- shared experts (always-on, DSv3) --------------------------------
+    if cfg.n_shared:
+        g = x @ layer_params["shared_wi_gate"]
+        u = x @ layer_params["shared_wi_up"]
+        h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)) * u
+        out = out + h @ layer_params["shared_wo"]
+    return out, aux
+
+
+def _moe_ffn_grouped(x, layer_params, cfg, act):
+    """§Perf optimization: DP-group-local dispatch. Tokens are reshaped
+    (G, T/G, D) with G = the data-parallel shard count; routing, sorting and
+    the dispatch gather/scatter are *batched per group* so they never cross
+    shards — only the (G, E, C, D) → expert-sharded buffer boundary moves
+    bytes (an all-to-all), plus the FSDP weight all-gather that ZeRO-3
+    already pays. Numerics are identical to the global dispatch up to
+    capacity dropping (per-group capacity vs global capacity)."""
+    T, D = x.shape
+    G = cfg.dispatch_groups
+    E, K = cfg.n_experts, cfg.top_k
+    Tg = T // G
+    C = max(1, int(np.ceil(Tg * K / E * cfg.capacity_factor)), min(Tg, 64))
+    bias = layer_params.get("router_bias")
+
+    xg = x.reshape(G, Tg, D)
+    xg = logical(xg, "expert_group", None, None)
+    idx, w, aux = jax.vmap(
+        lambda xb: route(xb, layer_params["router"], bias, cfg)
+    )(xg)  # (G, Tg, K)
+    aux = jnp.mean(aux)
+
+    def dispatch(xb, idx_b, w_b):
+        flat_e = idx_b.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), K)
+        flat_w = w_b.reshape(-1)
+        order = jnp.argsort(flat_e)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        pos = jnp.arange(Tg * K, dtype=jnp.int32)
+        first = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype)).astype(jnp.int32)
+        rank = pos - first[se]
+        keep = rank < C
+        buf_e = jnp.where(keep, se, E)
+        buf_r = jnp.where(keep, rank, C)
+        xb_buf = jnp.zeros((E + 1, C + 1, D), xb.dtype)
+        xb_buf = xb_buf.at[buf_e, buf_r].set(xb[st], mode="drop")[:E, :C]
+        return xb_buf, (buf_e, buf_r, st, sw, keep)
+
+    xbuf, meta = jax.vmap(dispatch)(xg, idx, w)  # (G, E, C, D)
+    xbuf = logical(xbuf, "expert_group", "expert", None, None)
+
+    wi_g, wi_u, wo = (
+        layer_params["wi_gate"],
+        layer_params["wi_up"],
+        layer_params["wo"],
+    )
+    g_ = jnp.einsum("gecd,edf->gecf", xbuf, wi_g)
+    u_ = jnp.einsum("gecd,edf->gecf", xbuf, wi_u)
+    h = (jax.nn.silu(g_) if act == "swiglu" else jax.nn.gelu(g_)) * u_
+    h = logical(h, "expert_group", "expert", None, "expert_mlp")
+    ybuf = jnp.einsum("gecf,efd->gecd", h, wo)
+    ybuf = logical(ybuf, "expert_group", "expert", None, None)
+
+    def combine(yb, m):
+        buf_e, buf_r, st, sw, keep = m
+        contrib = yb[buf_e.clip(0, E - 1), buf_r.clip(0, C - 1)]
+        contrib = jnp.where(keep[:, None], contrib, 0.0)
+        return jnp.zeros((Tg, D), x.dtype).at[st].add(
+            contrib * sw[:, None].astype(x.dtype)
+        )
+
+    out = jax.vmap(combine)(ybuf, meta).reshape(T, D)
+
+    if cfg.n_shared:
+        gsh = x @ layer_params["shared_wi_gate"]
+        ush = x @ layer_params["shared_wi_up"]
+        hsh = (jax.nn.silu(gsh) if act == "swiglu" else jax.nn.gelu(gsh)) * ush
+        out = out + hsh @ layer_params["shared_wo"]
+    return out, aux
+
+
+def router_bias_update(
+    bias: jnp.ndarray, idx: jnp.ndarray, n_experts: int, gamma: float = 1e-3
+) -> jnp.ndarray:
+    """DeepSeek-V3 aux-loss-free balancing: nudge under-loaded experts'
+    selection bias up, over-loaded down (applied outside the gradient)."""
+    load = jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    mean = jnp.mean(load)
+    return bias + gamma * jnp.sign(mean - load)

@@ -1,0 +1,111 @@
+"""Single-source-of-truth parameter schemas.
+
+A model declares its parameters once as a nested dict of ``ParamDef``s
+(shape + logical axes + initializer). From that one schema we derive:
+  * ``init_params``  — materialized pytree (PRNG-split per leaf),
+  * ``abstract_params`` — ShapeDtypeStructs for .lower() dry-runs,
+  * ``param_specs`` — NamedShardings / PartitionSpecs via the active rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.sharding import spec_for
+
+
+Initializer = Callable[[jax.Array, tuple[int, ...], jnp.dtype], jax.Array]
+
+
+def _he(key, shape, dtype):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return (jax.random.normal(key, shape) * np.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def _lecun(key, shape, dtype):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return (jax.random.normal(key, shape) * np.sqrt(1.0 / fan_in)).astype(dtype)
+
+
+def _embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def _zeros(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _ones(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+INITS: dict[str, Initializer] = {
+    "he": _he,
+    "lecun": _lecun,
+    "embed": _embed_init,
+    "zeros": _zeros,
+    "ones": _ones,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]   # logical axes, len == len(shape)
+    init: str = "lecun"
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = dict  # nested dict[str, ParamDef | Schema]
+
+
+def _flatten(schema: Schema, prefix=()):
+    for k, v in schema.items():
+        if isinstance(v, ParamDef):
+            yield prefix + (k,), v
+        else:
+            yield from _flatten(v, prefix + (k,))
+
+
+def init_params(schema: Schema, key: jax.Array):
+    flat = list(_flatten(schema))
+    keys = jax.random.split(key, max(len(flat), 1))
+    out: dict = {}
+    for (path, d), k in zip(flat, keys):
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = INITS[d.init](k, d.shape, jnp.dtype(d.dtype))
+    return out
+
+
+def abstract_params(schema: Schema):
+    out: dict = {}
+    for path, d in _flatten(schema):
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype))
+    return out
+
+
+def param_pspecs(schema: Schema):
+    """PartitionSpecs under the currently-active axis rules."""
+    out: dict = {}
+    for path, d in _flatten(schema):
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = spec_for(d.axes)
+    return out
+
+
+def count_params(schema: Schema) -> int:
+    return sum(int(np.prod(d.shape)) for _, d in _flatten(schema))

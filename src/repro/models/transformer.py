@@ -1,0 +1,397 @@
+"""Decoder-only LM supporting the assigned families:
+
+  qwen2-72b / qwen1.5-110b  — GQA + QKV bias, SwiGLU
+  gemma-2b                  — MQA (kv=1), GeGLU, head_dim 256, scaled embed
+  mixtral-8x22b             — GQA + sliding-window attention, MoE 8e top-2
+  deepseek-v3-671b          — MLA, 1 shared + 256 routed top-8 (sigmoid,
+                              aux-free bias), first-3-dense, MTP head
+
+Layers run under ``lax.scan`` over stacked parameters (compile time stays
+flat in depth — essential for 80-layer dry-runs), with optional per-layer
+remat. Decode uses in-place KV caches: rolling-window slots available for
+SWA archs, latent (c_kv, k_rope) for MLA.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.launch.sharding import logical
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models.layers import apply_rope, attention, glu_mlp, maybe_scan, rms_norm
+from repro.models.schema import ParamDef, init_params
+
+
+# ------------------------------------------------------------------ schema
+def lm_schema(cfg: LMConfig) -> dict:
+    L, D, N, Nkv, H, F, V = (
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.d_head,
+        cfg.d_ff,
+        cfg.vocab_size,
+    )
+    dt = cfg.dtype
+    sch: dict = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), "embed", dt),
+        "norm_attn": ParamDef((L, D), ("layer", None), "zeros", "float32"),
+        "norm_ffn": ParamDef((L, D), ("layer", None), "zeros", "float32"),
+        "final_norm": ParamDef((D,), (None,), "zeros", "float32"),
+    }
+    if not cfg.tie_embeddings:
+        sch["lm_head"] = ParamDef((D, V), ("embed", "vocab"), "lecun", dt)
+    if cfg.mla is not None:
+        sch["mla"] = mla_lib.mla_schema(cfg)
+    else:
+        attn = {
+            "wq": ParamDef((L, D, N, H), ("layer", "fsdp", "heads", None), "lecun", dt),
+            "wk": ParamDef((L, D, Nkv, H), ("layer", "fsdp", "kv_heads", None), "lecun", dt),
+            "wv": ParamDef((L, D, Nkv, H), ("layer", "fsdp", "kv_heads", None), "lecun", dt),
+            "wo": ParamDef((L, N, H, D), ("layer", "heads", None, "fsdp"), "lecun", dt),
+        }
+        if cfg.qkv_bias:
+            attn["bq"] = ParamDef((L, N, H), ("layer", "heads", None), "zeros", dt)
+            attn["bk"] = ParamDef((L, Nkv, H), ("layer", "kv_heads", None), "zeros", dt)
+            attn["bv"] = ParamDef((L, Nkv, H), ("layer", "kv_heads", None), "zeros", dt)
+        sch["attn"] = attn
+    if cfg.moe is not None:
+        k = cfg.moe.first_k_dense
+        if k:
+            fd = cfg.moe.d_ff_dense or F
+            sch["ffn_dense"] = {
+                "wi_gate": ParamDef((k, D, fd), ("layer", "fsdp", "mlp"), "lecun", dt),
+                "wi_up": ParamDef((k, D, fd), ("layer", "fsdp", "mlp"), "lecun", dt),
+                "wo": ParamDef((k, fd, D), ("layer", "mlp", "fsdp"), "lecun", dt),
+            }
+        sch["moe"] = moe_lib.moe_schema(cfg.moe, L - k, D, dt)
+    else:
+        sch["ffn_dense"] = {
+            "wi_gate": ParamDef((L, D, F), ("layer", "fsdp", "mlp"), "lecun", dt),
+            "wi_up": ParamDef((L, D, F), ("layer", "fsdp", "mlp"), "lecun", dt),
+            "wo": ParamDef((L, F, D), ("layer", "mlp", "fsdp"), "lecun", dt),
+        }
+    if cfg.mtp_depth > 0:
+        sch["mtp"] = {
+            "proj": ParamDef((2 * D, D), ("fsdp", "embed"), "lecun", dt),
+            "norm": ParamDef((D,), (None,), "zeros", "float32"),
+        }
+    return sch
+
+
+# ----------------------------------------------------------------- helpers
+def _gqa_qkv(pl: dict, x: jnp.ndarray, positions, cfg: LMConfig):
+    q = jnp.einsum("bsd,dnh->bsnh", x, pl["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, pl["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, pl["wv"])
+    if cfg.qkv_bias:
+        q = q + pl["bq"]
+        k = k + pl["bk"]
+        v = v + pl["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(pl_ffn, is_moe: bool, x2: jnp.ndarray, cfg: LMConfig):
+    B, S, D = x2.shape
+    if is_moe:
+        out, aux = moe_lib.moe_ffn(x2.reshape(B * S, D), pl_ffn, cfg.moe, cfg.act)
+        return out.reshape(B, S, D), aux
+    return (
+        glu_mlp(x2, pl_ffn["wi_gate"], pl_ffn["wi_up"], pl_ffn["wo"], cfg.act),
+        jnp.float32(0.0),
+    )
+
+
+def _layer_stacks(cfg: LMConfig, params: dict):
+    """Split stacked params into (is_moe, stack) groups: the dense prefix and
+    the MoE suffix (all-dense models have one group)."""
+    k = cfg.moe.first_k_dense if cfg.moe is not None else cfg.n_layers
+    attn_key = "mla" if cfg.mla is not None else "attn"
+    attn = params[attn_key]
+    take = lambda tree, lo, hi: jax.tree.map(lambda a: a[lo:hi], tree)
+    stacks = []
+    if k > 0:
+        stacks.append(
+            (
+                False,
+                {
+                    "attn": take(attn, 0, k),
+                    "ffn": take(params["ffn_dense"], 0, k),
+                    "norm_attn": params["norm_attn"][:k],
+                    "norm_ffn": params["norm_ffn"][:k],
+                },
+            )
+        )
+    if cfg.moe is not None and cfg.n_layers - k > 0:
+        L = cfg.n_layers
+        stacks.append(
+            (
+                True,
+                {
+                    "attn": take(attn, k, L),
+                    "ffn": params["moe"],
+                    "norm_attn": params["norm_attn"][k:],
+                    "norm_ffn": params["norm_ffn"][k:],
+                },
+            )
+        )
+    return stacks
+
+
+# ---------------------------------------------------------------- forward
+def forward(
+    cfg: LMConfig,
+    params: dict,
+    tokens: jnp.ndarray,       # (B, S) int32
+    *,
+    collect_cache: bool = False,
+):
+    """Full-sequence forward (train / prefill). Returns (logits, aux_loss,
+    caches or None); caches = list per layer-stack of stacked KV arrays."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    x = logical(x, "batch", "seq", "embed")
+    pos = jnp.arange(S, dtype=jnp.int32)
+    positions = jnp.broadcast_to(pos, (B, S))
+
+    caches = []
+    aux_total = jnp.float32(0.0)
+
+    def make_body(is_moe: bool):
+        def body(carry, pl):
+            x, aux = carry
+            h = rms_norm(x, pl["norm_attn"], cfg.norm_eps)
+            if cfg.mla is not None:
+                attn_out, kv = mla_lib.mla_attention(pl["attn"], h, pos, cfg)
+            else:
+                q, k, v = _gqa_qkv(pl["attn"], h, positions, cfg)
+                q = logical(q, "batch", "seq", "heads", None)
+                k = logical(k, "batch", "seq", "kv_heads", None)
+                attn_out = attention(
+                    q, k, v, pos, pos,
+                    window=cfg.sliding_window,
+                    softcap=cfg.attn_logit_softcap,
+                )
+                attn_out = jnp.einsum("bsnh,nhd->bsd", attn_out, pl["attn"]["wo"])
+                kv = (k, v)
+            x = x + logical(attn_out, "batch", "seq", "embed")
+            h2 = rms_norm(x, pl["norm_ffn"], cfg.norm_eps)
+            ffn_out, aux_l = _ffn(pl["ffn"], is_moe, h2, cfg)
+            x = x + logical(ffn_out, "batch", "seq", "embed")
+            return (x, aux + aux_l), (kv if collect_cache else None)
+
+        if cfg.remat in ("block", "full"):
+            body = jax.checkpoint(
+                body,
+                policy=None
+                if cfg.remat == "full"
+                else jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        return body
+
+    for is_moe, stack in _layer_stacks(cfg, params):
+        (x, aux_total), kv = maybe_scan(make_body(is_moe), (x, aux_total), stack)
+        if collect_cache:
+            caches.append(kv)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = logical(logits, "batch", "seq", "vocab")
+    return logits, aux_total, (caches if collect_cache else None)
+
+
+def loss_fn(cfg: LMConfig, params: dict, tokens: jnp.ndarray):
+    """Next-token cross entropy (+ MoE aux, + 1-depth MTP head when on)."""
+    logits, aux, _ = forward(cfg, params, tokens)
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll) + aux
+    if cfg.mtp_depth > 0:
+        # 1-depth MTP (DSv3 §2.2, lightweight variant): combine the current
+        # token's embedding with the next token's, project, share the head,
+        # and predict token t+2.
+        emb_next = jnp.take(params["embed"], tokens[:, 1:], axis=0)
+        h = jnp.take(params["embed"], tokens[:, :-1], axis=0)
+        cat = jnp.concatenate(
+            [rms_norm(h, params["mtp"]["norm"], cfg.norm_eps), emb_next], axis=-1
+        )
+        h2 = cat @ params["mtp"]["proj"]
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        mtp_logits = h2[:, :-1] @ head
+        lp2 = jax.nn.log_softmax(mtp_logits.astype(jnp.float32), axis=-1)
+        nll2 = -jnp.take_along_axis(lp2, tokens[:, 2:][..., None], axis=-1)[..., 0]
+        loss = loss + 0.1 * jnp.mean(nll2)
+    return loss
+
+
+# ------------------------------------------------------------------ decode
+@jax.tree_util.register_pytree_node_class
+class DecodeCache:
+    """Stacked caches per layer-stack. GQA: k/v (L, B, S_cap, Nkv, H); MLA:
+    ckv (L, B, S_cap, r) + kr (L, B, S_cap, d_rope). ``rolling`` caches use
+    slot = pos % S_cap (sliding-window archs). kind/s_cap/rolling are pytree
+    aux data (static under jit)."""
+
+    def __init__(self, data: tuple, kind: str, s_cap: int, rolling: bool):
+        self.data = data
+        self.kind = kind
+        self.s_cap = s_cap
+        self.rolling = rolling
+
+    def tree_flatten(self):
+        return (self.data,), (self.kind, self.s_cap, self.rolling)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    def replace_data(self, data: tuple) -> "DecodeCache":
+        return DecodeCache(data, self.kind, self.s_cap, self.rolling)
+
+    def __repr__(self):
+        return (
+            f"DecodeCache(kind={self.kind}, s_cap={self.s_cap}, "
+            f"rolling={self.rolling}, n_arrays={len(self.data)})"
+        )
+
+
+def init_cache(
+    cfg: LMConfig, batch: int, s_cap: int, *, rolling: bool = False
+) -> DecodeCache:
+    L = cfg.n_layers
+    dt = jnp.dtype(cfg.dtype)
+    if rolling:
+        assert cfg.sliding_window is not None
+        s_cap = min(s_cap, cfg.sliding_window)
+    if cfg.mla is not None:
+        m = cfg.mla
+        data = (
+            jnp.zeros((L, batch, s_cap, m.kv_lora_rank), dt),
+            jnp.zeros((L, batch, s_cap, m.d_rope), dt),
+        )
+        return DecodeCache(data, "mla", s_cap, rolling)
+    data = (
+        jnp.zeros((L, batch, s_cap, cfg.n_kv_heads, cfg.d_head), dt),
+        jnp.zeros((L, batch, s_cap, cfg.n_kv_heads, cfg.d_head), dt),
+    )
+    return DecodeCache(data, "gqa", s_cap, rolling)
+
+
+def decode_step(
+    cfg: LMConfig,
+    params: dict,
+    cache: DecodeCache,
+    token: jnp.ndarray,   # (B, 1) int32
+    pos: jnp.ndarray,     # () int32 — tokens already generated
+) -> tuple[jnp.ndarray, DecodeCache]:
+    """One token for the whole batch; layers scanned with cache as scan xs."""
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    x = logical(x, "batch", None, "embed")
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    S_cap = cache.s_cap
+    if cache.rolling:
+        slot = pos % S_cap
+        key_slots = jnp.arange(S_cap, dtype=jnp.int32)
+        key_pos = pos - ((pos - key_slots) % S_cap)  # may be negative: invalid
+    else:
+        slot = pos
+        key_pos = jnp.arange(S_cap, dtype=jnp.int32)
+    pos_q = jnp.full((1,), pos, dtype=jnp.int32)
+
+    take = lambda tree, lo, hi: jax.tree.map(lambda a: a[lo:hi], tree)
+
+    def gqa_body(carry, pl, cache_kv, is_moe):
+        x = carry
+        ck, cv = cache_kv
+        h = rms_norm(x, pl["norm_attn"], cfg.norm_eps)
+        q, k, v = _gqa_qkv(pl["attn"], h, positions, cfg)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        if cfg.decode_kv_blocks > 1 and S_cap % cfg.decode_kv_blocks == 0:
+            from repro.models.layers import blocked_decode_attention
+
+            attn_out = blocked_decode_attention(
+                q, ck, cv, pos_q, key_pos, cfg.decode_kv_blocks,
+                window=cfg.sliding_window,
+                softcap=cfg.attn_logit_softcap,
+            )
+        else:
+            attn_out = attention(
+                q, ck, cv, pos_q, key_pos,
+                window=cfg.sliding_window,
+                softcap=cfg.attn_logit_softcap,
+            )
+        attn_out = jnp.einsum("bsnh,nhd->bsd", attn_out, pl["attn"]["wo"])
+        x = x + attn_out
+        h2 = rms_norm(x, pl["norm_ffn"], cfg.norm_eps)
+        ffn_out, _ = _ffn(pl["ffn"], is_moe, h2, cfg)
+        return x + ffn_out, (ck, cv)
+
+    def mla_body(carry, pl, cache_kv, is_moe):
+        x = carry
+        cckv, ckr = cache_kv
+        h = rms_norm(x, pl["norm_attn"], cfg.norm_eps)
+        attn_out, cckv, ckr = mla_lib.mla_decode(pl["attn"], h, pos, cckv, ckr, cfg)
+        x = x + attn_out
+        h2 = rms_norm(x, pl["norm_ffn"], cfg.norm_eps)
+        ffn_out, _ = _ffn(pl["ffn"], is_moe, h2, cfg)
+        return x + ffn_out, (cckv, ckr)
+
+    new_data: list = []
+    out_x = x
+    offs = 0
+    for is_moe, stack in _layer_stacks(cfg, params):
+        L_s = stack["norm_attn"].shape[0]
+        cache_slice = tuple(take(c, offs, offs + L_s) for c in cache.data)
+
+        def body(carry, xs, _is_moe=is_moe):
+            pl, cs = xs
+            if cfg.mla is not None:
+                return mla_body(carry, pl, cs, _is_moe)
+            return gqa_body(carry, pl, cs, _is_moe)
+
+        out_x, cs_new = maybe_scan(body, out_x, (stack, cache_slice))
+        new_data.append(cs_new)
+        offs += L_s
+
+    joined = tuple(
+        jnp.concatenate([nd[i] for nd in new_data], axis=0)
+        if len(new_data) > 1
+        else new_data[0][i]
+        for i in range(len(new_data[0]))
+    )
+    x = rms_norm(out_x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, DecodeCache(joined, cache.kind, cache.s_cap, cache.rolling)
+
+
+def prefill(cfg: LMConfig, params: dict, tokens: jnp.ndarray):
+    """Prefill: full forward + caches stacked back to (L, B, S, ...)."""
+    logits, _, caches = forward(cfg, params, tokens, collect_cache=True)
+    joined = tuple(
+        jnp.concatenate([c[i] for c in caches], axis=0)
+        if len(caches) > 1
+        else caches[0][i]
+        for i in range(len(caches[0]))
+    )
+    kind = "mla" if cfg.mla is not None else "gqa"
+    return logits, DecodeCache(joined, kind, tokens.shape[1], False)
+
+
+def init(cfg: LMConfig, key: jax.Array) -> dict:
+    return init_params(lm_schema(cfg), key)

@@ -1,0 +1,11 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, cosine_warmup, init, update
+from repro.optim import compression
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "cosine_warmup",
+    "init",
+    "update",
+    "compression",
+]

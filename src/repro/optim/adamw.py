@@ -1,0 +1,124 @@
+"""AdamW in pure JAX with optional int8-quantized moments.
+
+At 512+ chips the optimizer state dominates HBM for the big LMs; storing m/v
+as int8 with a per-row f32 scale (block-wise absmax quantization, error kept
+implicitly by requantization) cuts state bytes 4× — one of the
+distributed-optimization tricks recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_moments: bool = False
+
+
+class QTensor(NamedTuple):
+    q: jnp.ndarray       # int8 payload
+    scale: jnp.ndarray   # f32 per-row scale (last-dim blocks)
+
+
+def _quant(x: jnp.ndarray, *, sqrt_domain: bool = False) -> QTensor:
+    if sqrt_domain:
+        # v >= 0: quantizing sqrt(v) compresses the dynamic range so small
+        # second moments never collapse to zero (which would blow up m/√v)
+        x = jnp.sqrt(jnp.maximum(x, 0.0))
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    return QTensor((x / scale).round().astype(jnp.int8), scale.astype(jnp.float32))
+
+
+def _dequant(t: QTensor, *, sqrt_domain: bool = False) -> jnp.ndarray:
+    x = t.q.astype(jnp.float32) * t.scale
+    return jnp.square(x) if sqrt_domain else x
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(cfg: AdamWConfig, params) -> AdamWState:
+    def zeros_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _quant(z) if cfg.quantize_moments and p.ndim >= 1 else z
+
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros_like, params),
+        v=jax.tree.map(zeros_like, params),  # v stored in sqrt domain
+    )
+
+
+def global_norm(grads) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+
+
+def update(
+    cfg: AdamWConfig,
+    grads,
+    state: AdamWState,
+    params,
+    lr_scale: jnp.ndarray | float = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    is_q = lambda t: isinstance(t, QTensor)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _dequant(m) if is_q(m) else m
+        v_f = _dequant(v, sqrt_domain=True) if is_q(v) else v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd_ = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + cfg.eps)
+        if cfg.quantize_moments:
+            # quantized moments can momentarily under-estimate v: clamp the
+            # per-element step (trust-region guard, standard for 8-bit Adam)
+            upd_ = jnp.clip(upd_, -10.0, 10.0)
+        new_p = p.astype(jnp.float32) - lr * (upd_ + cfg.weight_decay * p.astype(jnp.float32))
+        return (
+            new_p.astype(p.dtype),
+            _quant(m_f) if is_q(m) else m_f,
+            _quant(v_f, sqrt_domain=True) if is_q(v) else v_f,
+        )
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = jax.tree.flatten(state.m, is_leaf=is_q)[0]
+    flat_v = jax.tree.flatten(state.v, is_leaf=is_q)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics
+
+
+def cosine_warmup(step, *, warmup: int, total: int, floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

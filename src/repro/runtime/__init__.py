@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (
+    SimulatedPreemption,
+    TrainSupervisor,
+    elastic_restore,
+)
+
+__all__ = ["SimulatedPreemption", "TrainSupervisor", "elastic_restore"]

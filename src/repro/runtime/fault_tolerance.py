@@ -1,0 +1,98 @@
+"""Fault tolerance / elasticity for long-running training (deliverable: the
+large-scale-runnability axis).
+
+Mechanisms (each exercised by tests/test_fault_tolerance.py):
+
+  * **checkpoint/restart** — ``TrainSupervisor`` wraps the step loop with
+    periodic async checkpoints and restart-from-latest; a failure injector
+    simulates preemptions and the loop resumes losslessly (bitwise-equal
+    state to an uninterrupted run, since steps are deterministic).
+  * **elastic rescale** — a checkpoint written on an N-way mesh restores
+    onto an M-way mesh (`elastic_restore`): leaves are host-gathered numpy,
+    so resharding is a device_put with the new mesh's NamedShardings.
+    Survivors of a dead pod rebuild a (1, 16, 16) mesh and continue.
+  * **straggler mitigation** — at the step level every collective is
+    synchronous, so one slow chip gates the step (TPU SPMD reality). The
+    mitigations here are structural: (i) bounded per-round work in the
+    matching engine (a straggler bounds one round, never the query), and
+    (ii) the supervisor tracks a rolling step-time EWMA and flags
+    step-time regressions > ``straggler_factor`` so the launcher can
+    evict/replace the slow host between checkpoints (the standard
+    TPU-fleet playbook); (iii) data loading is host-local and prefetched,
+    never a global barrier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint import Checkpointer
+
+
+class SimulatedPreemption(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class TrainSupervisor:
+    checkpointer: Checkpointer
+    ckpt_every: int = 50
+    straggler_factor: float = 3.0
+    # failure injection for tests: step -> exception factory
+    fail_at: dict[int, Callable[[], Exception]] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def run(
+        self,
+        *,
+        state: Any,                  # (params, opt_state) pytree
+        step_fn: Callable,           # (state, batch, step) -> (state, metrics)
+        batch_fn: Callable,          # step -> batch (deterministic!)
+        n_steps: int,
+        start_step: int | None = None,
+        shardings: Any = None,
+    ):
+        """Run to ``n_steps``, resuming from the latest checkpoint if any.
+        Returns (state, history). Raises SimulatedPreemption out of the loop
+        when injected — callers re-invoke ``run`` to model a restart."""
+        latest = self.checkpointer.latest_step()
+        step = 0
+        if start_step is not None:
+            step = start_step
+        elif latest is not None:
+            state = self.checkpointer.restore(latest, state, shardings)
+            step = latest
+        history: list[dict] = []
+        ewma = None
+        while step < n_steps:
+            if step in self.fail_at:
+                exc = self.fail_at.pop(step)()
+                raise exc
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch_fn(step), step)
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+            dt = time.perf_counter() - t0
+            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            straggling = dt > self.straggler_factor * ewma
+            history.append(
+                {"step": step, "dt": dt, "straggler_flag": straggling, **{
+                    k: float(v) for k, v in metrics.items()
+                }}
+            )
+            step += 1
+            if step % self.ckpt_every == 0 or step == n_steps:
+                self.checkpointer.save(step, state)
+        self.checkpointer.wait()
+        return state, history
+
+
+def elastic_restore(checkpointer: Checkpointer, like, new_shardings):
+    """Restore the latest checkpoint onto a *different* mesh (elastic
+    rescale after losing or gaining hosts)."""
+    latest = checkpointer.latest_step()
+    assert latest is not None, "no checkpoint to restore"
+    return checkpointer.restore(latest, like, new_shardings), latest

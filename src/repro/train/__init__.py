@@ -1,0 +1,3 @@
+from repro.train.step import loss_for, make_serve_fns, make_train_step
+
+__all__ = ["loss_for", "make_serve_fns", "make_train_step"]

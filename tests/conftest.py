@@ -1,0 +1,7 @@
+"""Test session config. NOTE: no XLA device-count flags here — smoke tests
+and benches must see exactly one CPU device (the 512-device flag belongs to
+launch/dryrun.py alone). Multi-device tests spawn subprocesses."""
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -1,0 +1,59 @@
+"""Cluster graph + load sets (paper §5.3, Theorems 3-5)."""
+import numpy as np
+
+from repro.core import QueryGraph, SubgraphMatcher, make_plan
+from repro.graphstore import ClusterGraphIndex, PartitionedGraph, generators
+
+
+def test_theorem3_distance_bound():
+    """D_C(shard(u), shard(v)) <= D_Gq(u, v) for all u, v."""
+    g = generators.ring_of_cliques(6, 8, 3, seed=1)
+    pg = PartitionedGraph.build(g, 6, mode="range")
+    cgi = ClusterGraphIndex.build(pg)
+    all_pairs = [(a, b) for a in range(3) for b in range(3)]
+    C = cgi.cluster_adjacency(all_pairs)
+    D = ClusterGraphIndex.bfs_distances(C)
+    # BFS over the data graph from a few sources
+    rng = np.random.default_rng(0)
+    for src in rng.choice(g.n_nodes, 5, replace=False):
+        dist = {int(src): 0}
+        frontier = [int(src)]
+        while frontier:
+            nxt = []
+            for v in frontier:
+                for u in g.neighbors(v):
+                    u = int(u)
+                    if u not in dist:
+                        dist[u] = dist[v] + 1
+                        nxt.append(u)
+            frontier = nxt
+        s_src = int(pg.old_to_new[src] // pg.cap)
+        for v, d_uv in dist.items():
+            s_v = int(pg.old_to_new[v] // pg.cap)
+            assert D[s_src, s_v] <= d_uv
+
+
+def test_ring_cluster_graph_is_sparse():
+    g = generators.ring_of_cliques(8, 10, 4, seed=0)
+    pg = PartitionedGraph.build(g, 8, mode="range")
+    cgi = ClusterGraphIndex.build(pg)
+    C = cgi.cluster_adjacency([(a, b) for a in range(4) for b in range(4)])
+    # range partition of a ring of cliques → (near-)ring cluster graph
+    assert C.sum() < 8 * 8, "cluster graph must not be complete"
+    D = ClusterGraphIndex.bfs_distances(C)
+    assert D.max() >= 2, "load sets can exclude far shards"
+
+
+def test_load_sets_head_is_local():
+    g = generators.ring_of_cliques(8, 10, 4, seed=0)
+    pg = PartitionedGraph.build(g, 8, mode="range")
+    cgi = ClusterGraphIndex.build(pg)
+    q = QueryGraph.build([0, 1, 2], [(0, 1), (1, 2)])
+    plan = make_plan(q, pg.freq)
+    load = cgi.load_sets(q.label_pairs(), plan.head_dists)
+    head_row = load[plan.head]
+    assert (head_row == np.eye(8, dtype=bool)).all(), "head STwig loads only itself"
+    # monotone: larger distance → superset load set
+    for t, d in enumerate(plan.head_dists):
+        if d > 0:
+            assert load[t].sum() >= head_row.sum()

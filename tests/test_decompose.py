@@ -1,0 +1,84 @@
+"""Algorithm 2 (STwig decomposition + ordering): paper walkthrough +
+properties (cover, edge-disjointness, Theorem 2 bound)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import QueryGraph, f_values, head_stwig_selection, stwig_order_selection
+
+
+def paper_fig6_query():
+    name = {c: i for i, c in enumerate("abcdef")}
+    edges = [("d", "b"), ("d", "c"), ("d", "e"), ("d", "f"),
+             ("c", "a"), ("c", "f"), ("b", "a"), ("b", "f")]
+    q = QueryGraph.build(
+        labels=list(range(6)), edges=[(name[a], name[b]) for a, b in edges]
+    )
+    return q, name
+
+
+def test_paper_walkthrough_fvalues():
+    q, name = paper_fig6_query()
+    f = f_values(q, np.full(6, 10))
+    assert f[name["d"]] == pytest.approx(0.4)
+    assert f[name["c"]] == pytest.approx(0.3)
+    assert f[name["a"]] == pytest.approx(0.2)
+    assert f[name["e"]] == pytest.approx(0.1)
+
+
+def test_paper_walkthrough_decomposition():
+    q, name = paper_fig6_query()
+    dec = stwig_order_selection(q, np.full(6, 10))
+    # paper result: 3 STwigs, first rooted at d with children {b, c, e, f};
+    # the other two rooted at b and c (order is a documented tie-break)
+    assert len(dec.stwigs) == 3
+    assert dec.stwigs[0].root == name["d"]
+    assert set(dec.stwigs[0].children) == {name[c] for c in "bcef"}
+    assert {t.root for t in dec.stwigs} == {name[c] for c in "bcd"}
+    assert dec.covers(q) and dec.edge_disjoint()
+    # rule 1: every non-first root is bound by earlier STwigs
+    for t, bb in list(zip(dec.stwigs, dec.bound_before))[1:]:
+        assert t.root in bb
+
+
+def _min_vertex_cover_size(q: QueryGraph) -> int:
+    n = q.n_nodes
+    for k in range(n + 1):
+        for sub in itertools.combinations(range(n), k):
+            s = set(sub)
+            if all(u in s or v in s for u, v in q.edges):
+                return k
+    return n
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_two_approximation_property(data):
+    n = data.draw(st.integers(3, 7))
+    rng = np.random.default_rng(data.draw(st.integers(0, 10**6)))
+    edges = [(int(rng.integers(i)), i) for i in range(1, n)]
+    extra = data.draw(st.integers(0, n))
+    for _ in range(extra):
+        a, b = rng.integers(n, size=2)
+        if a != b:
+            edges.append((int(a), int(b)))
+    q = QueryGraph.build(rng.integers(0, 3, n).astype(int).tolist(), edges)
+    freq = np.full(3, 10)
+    dec = stwig_order_selection(q, freq)
+    assert dec.covers(q), "every query edge in exactly one STwig"
+    assert dec.edge_disjoint()
+    # Theorem 2: |T| <= 2 · |optimal cover| = 2 · |min vertex cover|
+    assert len(dec.stwigs) <= 2 * max(_min_vertex_cover_size(q), 1)
+
+
+def test_head_stwig_minimizes_eccentricity():
+    q, name = paper_fig6_query()
+    dec = stwig_order_selection(q, np.full(6, 10))
+    head, dists = head_stwig_selection(q, dec)
+    M = q.shortest_paths()
+    roots = [t.root for t in dec.stwigs]
+    ecc = [max(M[r, r2] for r2 in roots) for r in roots]
+    assert ecc[head] == min(ecc)
+    assert dists[head] == 0

@@ -1,0 +1,67 @@
+"""Graph substrate: partition roundtrip, label index, bitsets (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.graphstore import (
+    LabelIndex,
+    PartitionedGraph,
+    bitset_test_np,
+    generators,
+    pack_bitset,
+    unpack_bitset,
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(20, 300),
+    mdeg=st.integers(1, 8),
+    s=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 99),
+    mode=st.sampled_from(["hash", "range"]),
+)
+def test_partition_preserves_graph(n, mdeg, s, seed, mode):
+    g = generators.rmat(n, mdeg * n, 5, seed=seed)
+    pg = PartitionedGraph.build(g, s, mode=mode)
+    # edge multiset preserved under relabeling
+    orig = set()
+    for v in range(g.n_nodes):
+        for u in g.neighbors(v):
+            orig.add((v, int(u)))
+    recon = set()
+    for sh in range(s):
+        ne = int(pg.n_local_edges[sh])
+        src_new = sh * pg.cap + pg.edge_src[sh, :ne].astype(np.int64)
+        dst_new = pg.indices[sh, :ne].astype(np.int64)
+        for a, b in zip(src_new, dst_new):
+            recon.add((int(pg.new_to_old[a]), int(pg.new_to_old[b])))
+    assert orig == recon
+    # labels preserved
+    for v in range(g.n_nodes):
+        assert pg.all_labels[pg.old_to_new[v]] == g.labels[v]
+    # ghost entry is the invalid label
+    assert pg.all_labels[-1] == g.n_labels
+
+
+def test_label_index_complete():
+    g = generators.rmat(500, 2000, 7, seed=1)
+    pg = PartitionedGraph.build(g, 4)
+    li = LabelIndex(pg)
+    total = 0
+    for sh in range(4):
+        for l in range(7):
+            ids = li.get_ids(sh, l)
+            assert (pg.labels[sh][ids] == l).all()
+            total += len(ids)
+    assert total == g.n_nodes
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 2000), p=st.floats(0.0, 1.0), seed=st.integers(0, 99))
+def test_bitset_roundtrip(n, p, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(n) < p
+    words = pack_bitset(mask)
+    assert (unpack_bitset(words, n) == mask).all()
+    ids = rng.integers(0, n, size=min(n, 64))
+    assert (bitset_test_np(words, ids) == mask[ids]).all()

@@ -1,0 +1,96 @@
+"""Sort-merge join vs a brute-force oracle + join-order selection."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.join import JoinTable, Schema, select_join_order, sort_merge_join
+
+
+def brute_join(rows_a, qn_a, labs_a, rows_b, qn_b, labs_b):
+    shared = [q for q in qn_b if q in qn_a]
+    pa = [qn_a.index(q) for q in shared]
+    pb = [qn_b.index(q) for q in shared]
+    merged_q = list(qn_a) + [q for q in qn_b if q not in qn_a]
+    merged_l = list(labs_a) + [l for q, l in zip(qn_b, labs_b) if q not in qn_a]
+    extra = [i for i, q in enumerate(qn_b) if q not in qn_a]
+    out = set()
+    for ra in rows_a:
+        for rb in rows_b:
+            if all(ra[x] == rb[y] for x, y in zip(pa, pb)):
+                row = tuple(ra) + tuple(rb[i] for i in extra)
+                ok = all(
+                    row[i] != row[j]
+                    for i in range(len(row))
+                    for j in range(i + 1, len(row))
+                    if merged_l[i] == merged_l[j]
+                )
+                if ok:
+                    out.add(row)
+    return out, tuple(merged_q)
+
+
+def _table(rows, cap, w=2):
+    n = len(rows)
+    cols = np.full((cap, w), 10**6, np.int32)
+    valid = np.zeros(cap, bool)
+    if n:
+        cols[:n] = np.asarray(rows, np.int32)
+        valid[:n] = True
+    return JoinTable(
+        cols=jnp.asarray(cols),
+        valid=jnp.asarray(valid),
+        n_rows=jnp.int32(n),
+        overflow=jnp.bool_(False),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    na=st.integers(0, 40),
+    nb=st.integers(0, 40),
+    vals=st.integers(3, 12),
+    seed=st.integers(0, 999),
+)
+def test_join_matches_bruteforce(na, nb, vals, seed):
+    rng = np.random.default_rng(seed)
+    qn_a, labs_a = (0, 1), (0, 1)
+    qn_b, labs_b = (1, 2), (1, 0)  # node 2 shares label with node 0
+    rows_a = [tuple(rng.integers(0, vals, 2)) for _ in range(na)]
+    rows_b = [tuple(rng.integers(0, vals, 2)) for _ in range(nb)]
+    ta, tb = _table(rows_a, 64), _table(rows_b, 64)
+    out, schema = sort_merge_join(
+        ta, tb, Schema(qn_a, labs_a), Schema(qn_b, labs_b), out_cap=4096, dup_cap=64
+    )
+    got = set(
+        map(tuple, np.asarray(out.cols)[np.asarray(out.valid)].tolist())
+    )
+    want, merged_q = brute_join(rows_a, qn_a, labs_a, rows_b, qn_b, labs_b)
+    assert schema.qnodes == merged_q
+    assert not bool(out.overflow)
+    assert got == want
+
+
+def test_join_dup_overflow_flag():
+    rows_a = [(5, i) for i in range(30)]  # 30 rows share join key 5
+    rows_b = [(5, 99)]
+    ta, tb = _table(rows_a, 32), _table(rows_b, 8)
+    out, _ = sort_merge_join(
+        ta, tb, Schema((0, 1), (0, 1)), Schema((0, 2), (0, 2)),
+        out_cap=512, dup_cap=8,
+    )
+    assert bool(out.overflow), "run longer than dup_cap must flag overflow"
+
+
+def test_select_join_order_connected():
+    schemas = [
+        Schema((0, 1), (0, 0)),
+        Schema((2, 3), (1, 1)),
+        Schema((1, 2), (0, 1)),
+    ]
+    order = select_join_order(schemas, [100, 10, 50])
+    # starts from the smallest, and every next table shares a query node
+    assert order[0] == 1
+    joined = set(schemas[order[0]].qnodes)
+    for i in order[1:]:
+        assert joined & set(schemas[i].qnodes)
+        joined |= set(schemas[i].qnodes)

@@ -1,0 +1,160 @@
+"""Per-kernel validation (interpret mode) against the pure-jnp oracles,
+with hypothesis shape/dtype sweeps as the brief requires."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+# ------------------------------------------------------------------ flash
+from repro.kernels.flash_attention import flash_attention, mha_reference
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    s_pow=st.integers(6, 8),
+    nkv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    h=st.sampled_from([32, 64, 128]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    window=st.sampled_from([None, 32, 100]),
+    softcap=st.sampled_from([None, 30.0]),
+)
+def test_flash_attention_sweep(b, s_pow, nkv, g, h, dtype, window, softcap):
+    s = 2**s_pow
+    rng = np.random.default_rng(s_pow * 31 + nkv)
+    q = jnp.asarray(rng.normal(size=(b, s, nkv * g, h)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, nkv, h)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, nkv, h)), dtype)
+    out = flash_attention(q, k, v, window=window, softcap=softcap, interpret=True)
+    ref = mha_reference(q, k, v, window=window, softcap=softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ----------------------------------------------------------------- bitset
+from repro.kernels.bitset import bitset_lookup, bitset_pack, bitset_unpack
+from repro.kernels.bitset.ref import (
+    lookup_reference,
+    pack_reference,
+    unpack_reference,
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(w_pow=st.integers(4, 12), seed=st.integers(0, 99))
+def test_bitset_roundtrip_sweep(w_pow, seed):
+    W = 2**w_pow
+    rng = np.random.default_rng(seed)
+    words = jnp.asarray(rng.integers(0, 2**32, W, dtype=np.uint32))
+    bits = bitset_unpack(words, interpret=True)
+    assert (bits == unpack_reference(words)).all()
+    assert (bitset_pack(bits, interpret=True) == words).all()
+    ids = jnp.asarray(rng.integers(0, W * 32, 1024), jnp.int32)
+    assert (
+        bitset_lookup(words, ids, interpret=True) == lookup_reference(words, ids)
+    ).all()
+
+
+def test_bitset_matches_graphstore_convention():
+    from repro.graphstore.labels import bitset_test_np, pack_bitset
+
+    rng = np.random.default_rng(0)
+    mask = rng.random(4096) < 0.2
+    words = pack_bitset(mask)
+    ids = np.arange(4096)
+    got = bitset_lookup(jnp.asarray(words), jnp.asarray(ids, jnp.int32), interpret=True)
+    assert (np.asarray(got) == bitset_test_np(words, ids)).all()
+
+
+# ------------------------------------------------------------- join probe
+from repro.kernels.join_probe import probe_lower_bound, probe_window
+from repro.kernels.join_probe.ref import lower_bound_reference, window_reference
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    na=st.integers(16, 2000),
+    nb_pow=st.integers(5, 11),
+    dup=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 99),
+)
+def test_join_probe_sweep(na, nb_pow, dup, seed):
+    rng = np.random.default_rng(seed)
+    # duplicated keys stress the run windows
+    ka = np.sort(rng.integers(0, max(na // 4, 2), na)).astype(np.uint32)
+    kb = rng.integers(0, max(na // 4, 2), 2**nb_pow).astype(np.uint32)
+    lo = probe_lower_bound(jnp.asarray(ka), jnp.asarray(kb), interpret=True)
+    assert (np.asarray(lo) == np.asarray(lower_bound_reference(jnp.asarray(ka), jnp.asarray(kb)))).all()
+    hit, idx = probe_window(jnp.asarray(ka), jnp.asarray(kb), lo, dup_cap=dup, interpret=True)
+    h2, i2 = window_reference(jnp.asarray(ka), jnp.asarray(kb), lo, dup_cap=dup)
+    assert (np.asarray(hit) == np.asarray(h2)).all()
+    assert (np.asarray(idx) == np.asarray(i2)).all()
+
+
+# ------------------------------------------------------------- segment_mp
+from repro.kernels.segment_mp import segment_mp
+from repro.kernels.segment_mp.ref import segment_mp_reference
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    e_pow=st.integers(6, 11),
+    d=st.sampled_from([8, 32, 128]),
+    n=st.integers(10, 500),
+    seed=st.integers(0, 99),
+)
+def test_segment_mp_sweep(e_pow, d, n, seed):
+    E = 2**e_pow
+    rng = np.random.default_rng(seed)
+    dst = jnp.asarray(np.sort(rng.integers(0, n, E)), jnp.int32)
+    msg = jnp.asarray(rng.normal(size=(E, d)), jnp.float32)
+    out = segment_mp(msg, dst, n, interpret=True)
+    ref = segment_mp_reference(msg, dst, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+# -------------------------------------------------------------------- cin
+from repro.kernels.cin import cin_layer
+from repro.kernels.cin.ref import cin_layer_reference
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.sampled_from([4, 20]),
+    m=st.sampled_from([6, 10]),
+    d=st.sampled_from([64, 128, 256]),
+    hp=st.sampled_from([8, 16]),
+    seed=st.integers(0, 99),
+)
+def test_cin_sweep(b, h, m, d, hp, seed):
+    rng = np.random.default_rng(seed)
+    xk = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    x0 = jnp.asarray(rng.normal(size=(b, m, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(h * m, hp)), jnp.float32)
+    out = cin_layer(xk, x0, w, interpret=True)
+    ref = cin_layer_reference(xk, x0, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3, rtol=1e-3)
+
+
+# -------------------------------------------------------- candidate filter
+from repro.kernels.bitset import candidate_filter
+from repro.kernels.bitset.ref import candidate_filter_reference
+
+
+@settings(max_examples=10, deadline=None)
+@given(e_pow=st.integers(5, 11), nlab=st.integers(2, 6), seed=st.integers(0, 99))
+def test_candidate_filter_sweep(e_pow, nlab, seed):
+    E = 2**e_pow
+    rng = np.random.default_rng(seed)
+    W = 256
+    words = jnp.asarray(rng.integers(0, 2**32, W, dtype=np.uint32))
+    ids = jnp.asarray(rng.integers(0, W * 32, E), jnp.int32)
+    labs = jnp.asarray(rng.integers(0, nlab, E), jnp.int32)
+    rok = jnp.asarray(rng.random(E) < 0.7)
+    got = candidate_filter(words, ids, labs, rok, 1, interpret=True)
+    want = candidate_filter_reference(words, ids, labs, rok, 1)
+    assert (np.asarray(got) == np.asarray(want)).all()

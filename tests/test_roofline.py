@@ -1,0 +1,70 @@
+"""Roofline machinery: HLO collective parser, term arithmetic, flop models."""
+import numpy as np
+
+from repro.analysis.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    model_flops_lm,
+    parse_collectives,
+)
+from repro.configs import get
+
+FAKE_HLO = """
+ENTRY %main {
+  %ag = bf16[8,1024,128]{2,1,0} all-gather(bf16[1,1024,128]{2,1,0} %p0), dims={0}
+  %ar.1 = f32[4096]{0} all-reduce(f32[4096]{0} %p1), to_apply=%add
+  %rs = f32[512,16]{1,0} reduce-scatter(f32[4096,16]{1,0} %x), dimensions={0}
+  %cp = u32[256]{0} collective-permute(u32[256]{0} %y), source_target_pairs={{0,1}}
+  %a2a = bf16[64,64]{1,0} all-to-all(bf16[64,64]{1,0} %z), dimensions={0}
+  %ars = f32[128]{0} all-reduce-start(f32[128]{0} %w), to_apply=%add
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = parse_collectives(FAKE_HLO, n_devices=8)
+    assert st.count_by_kind == {
+        "all-gather": 1,
+        "all-reduce": 2,
+        "reduce-scatter": 1,
+        "collective-permute": 1,
+        "all-to-all": 1,
+    }
+    ring = 7 / 8
+    assert np.isclose(
+        st.bytes_by_kind["all-gather"], 8 * 1024 * 128 * 2 * ring
+    )
+    assert np.isclose(
+        st.bytes_by_kind["all-reduce"], (4096 * 4 + 128 * 4) * 2 * ring
+    )
+    assert np.isclose(st.bytes_by_kind["collective-permute"], 256 * 4)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(
+        flops=PEAK_FLOPS,         # exactly 1 s of compute
+        hbm_bytes=HBM_BW / 2,     # 0.5 s
+        collective_bytes=ICI_BW * 2,  # 2 s
+        n_chips=4,
+        model_flops=PEAK_FLOPS * 4,  # ideal = 1 s/chip
+    )
+    assert np.isclose(r.t_compute, 1.0)
+    assert np.isclose(r.t_memory, 0.5)
+    assert np.isclose(r.t_collective, 2.0)
+    assert r.bottleneck == "collective"
+    assert np.isclose(r.useful_flops_ratio, 1.0)
+    assert np.isclose(r.roofline_fraction, 0.5)  # ideal 1s / bound 2s
+
+
+def test_model_flops_published_configs():
+    # 6·N_active·D sanity for DeepSeek-V3: 37B active × 6 × tokens
+    cfg = get("deepseek-v3-671b").config
+    f = model_flops_lm(cfg, batch=256, seq=4096, kind="train")
+    tokens = 256 * 4096
+    assert np.isclose(f, 6 * cfg.n_active_params() * tokens)
+    assert 35e9 < cfg.n_active_params() < 40e9
+    # decode counts one token per sequence
+    f_dec = model_flops_lm(cfg, batch=128, seq=32768, kind="decode")
+    assert np.isclose(f_dec, 2 * cfg.n_active_params() * 128)

@@ -1,0 +1,64 @@
+"""Logical-axis rules: divisibility-aware mappings + spec_for dedup."""
+import jax
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get
+from repro.launch.rules import make_rules
+from repro.launch.sharding import axis_rules, spec_for
+
+
+@pytest.fixture()
+def mesh():
+    # a 1-device mesh with the production axis NAMES (sizes don't matter for
+    # spec construction; divisibility checks use a fake shape below)
+    return jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+
+
+class _FakeMesh:
+    """Stand-in with production axis sizes for rule construction."""
+
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_gemma_heads_cannot_shard():
+    rules = make_rules(get("gemma-2b").config, "train", _FakeMesh())
+    assert rules["heads"] is None          # 8 heads < 16-way model axis
+    assert rules["mlp"] == "model"         # 16384 % 16 == 0
+    assert rules["vocab"] == "model"       # 256000 % 16 == 0
+
+
+def test_qwen_heads_shard():
+    rules = make_rules(get("qwen2-72b").config, "train", _FakeMesh())
+    assert rules["heads"] == "model"
+    assert rules["kv_heads"] is None       # 8 kv heads: replicate
+
+
+def test_mixtral_experts_fall_back_to_mlp_sharding():
+    rules = make_rules(get("mixtral-8x22b").config, "train", _FakeMesh())
+    assert rules["expert"] is None         # 8 experts < 16
+    assert rules["expert_mlp"] == "model"  # shard the expert FFN dim instead
+
+
+def test_deepseek_experts_shard():
+    rules = make_rules(get("deepseek-v3-671b").config, "train", _FakeMesh())
+    assert rules["expert"] == "model"      # 256 % 16 == 0
+    assert rules["expert_mlp"] is None
+
+
+def test_decode_rules_shard_kv_seq():
+    cfg = get("qwen2-72b").config
+    assert make_rules(cfg, "decode", _FakeMesh())["kv_seq"] == "model"
+    long = make_rules(cfg, "decode_long", _FakeMesh())
+    assert long["kv_seq"] == ("pod", "data", "model")
+    assert long["batch"] is None
+
+
+def test_spec_for_deduplicates_axes(mesh):
+    rules = {"a": ("pod", "data"), "b": "data", "c": None}
+    with axis_rules(mesh, rules):
+        # "data" already used by the first dim → dropped from the second
+        assert spec_for(("a", "b")) == P(("pod", "data"))
+        assert spec_for(("b", "a")) == P("data", "pod")
+        assert spec_for(("c", None)) == P()
