@@ -20,29 +20,29 @@ WORKER = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
-import numpy as np, jax
-from jax.sharding import Mesh
+import numpy as np
+from repro.api import GraphSession
 from repro.graphstore import PartitionedGraph, generators
 from repro.core import QueryGraph
-from repro.core.dist import DistributedMatcher
 
 # ring-of-cliques + range partition → sparse (ring) cluster graph
 g = generators.ring_of_cliques(n_cliques=8, clique_size=40, n_labels=4, seed=0)
 pg = PartitionedGraph.build(g, 8, mode="range")
-mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
-dm = DistributedMatcher(pg, mesh)
+session = GraphSession.open(pg, backend="sharded")
+dm = session.engine
 q = QueryGraph.build(labels=[0, 1, 2, 3], edges=[(0, 1), (1, 2), (2, 3), (0, 2)])
 
-plan = dm.plan(q)
+compiled = session.compile(q, max_matches=0)
+plan = compiled.plan
 load = dm.cgi.load_sets(q.label_pairs(), plan.head_dists)
 radii = dm.ring_radii_for(load)
 print(f"# ring radii per STwig: {radii}")
 
 for use_ring, name in ((False, "allgather"), (True, "ring")):
-    r0 = dm.match(q, max_matches=0, adaptive=False, use_ring=use_ring)  # warmup
+    r0 = compiled.run(adaptive=False, use_ring=use_ring)  # warmup
     t0 = time.perf_counter()
     for _ in range(3):
-        res = dm.match(q, max_matches=0, adaptive=False, use_ring=use_ring)
+        res = compiled.run(adaptive=False, use_ring=use_ring)
     dt = (time.perf_counter() - t0) / 3
     # analytic bytes/shard: allgather = (S-1)*rows; ring = 2*max_radius*rows
     S = 8

@@ -15,29 +15,12 @@ WORKER = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
-import numpy as np, jax
-from jax.sharding import Mesh
+import numpy as np
+from repro.api import GraphSession
 from repro.graphstore import PartitionedGraph, generators
-from repro.core import QueryGraph, SubgraphMatcher
-from repro.core.dist import DistributedMatcher
+from repro.workloads import dfs_query
 
 g = generators.rmat(60_000, 16 * 60_000, 64, seed=7)
-
-def dfs_query(g, rng, nq):
-    start = int(rng.integers(g.n_nodes))
-    nodes, edges, seen = [start], [], {start}
-    stack = [start]
-    while stack and len(nodes) < nq:
-        v = stack.pop()
-        for u in g.neighbors(v):
-            u = int(u)
-            if u not in seen and len(nodes) < nq:
-                seen.add(u); nodes.append(u); edges.append((v, u)); stack.append(u)
-    if len(nodes) < 2:
-        return None
-    remap = {v: i for i, v in enumerate(nodes)}
-    return QueryGraph.build([int(g.labels[v]) for v in nodes],
-                            [(remap[a], remap[b]) for a, b in edges])
 
 rng = np.random.default_rng(11)
 queries = []
@@ -48,17 +31,13 @@ while len(queries) < 3:
 
 for S in (1, 2, 4, 8):
     pg = PartitionedGraph.build(g, S)
-    if S == 1:
-        m = SubgraphMatcher(pg)
-    else:
-        mesh = Mesh(np.array(jax.devices()[:S]), ("data",))
-        m = DistributedMatcher(pg, mesh)
+    session = GraphSession.open(pg)  # auto: local for S=1, sharded otherwise
     # warmup then measure
     for q in queries:
-        m.match(q, max_matches=1024, adaptive=False)
+        session.run(q, max_matches=1024, adaptive=False)
     t0 = time.perf_counter()
     for q in queries:
-        m.match(q, max_matches=1024, adaptive=False)
+        session.run(q, max_matches=1024, adaptive=False)
     dt = (time.perf_counter() - t0) / len(queries)
     print(f"speedup_machines_{S},{dt*1e6:.1f},")
 """

@@ -3,6 +3,9 @@
 Real datasets (US Patents, WordNet) are unavailable offline; each benchmark
 uses R-MAT graphs with matched node/edge/label counts and notes it. Output
 rows follow the harness convention: ``name,us_per_call,derived``.
+
+Query generators live in `repro.workloads` (re-exported here for the bench
+scripts); matching goes through the `GraphSession` facade.
 """
 from __future__ import annotations
 
@@ -10,8 +13,9 @@ import time
 
 import numpy as np
 
-from repro.core import QueryGraph, SubgraphMatcher
+from repro.api import GraphSession
 from repro.graphstore import PartitionedGraph, generators
+from repro.workloads import dfs_query, random_query  # noqa: F401  (re-export)
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -26,42 +30,6 @@ def timed(fn, *, repeats: int = 3):
     return (time.perf_counter() - t0) / repeats
 
 
-def dfs_query(g, rng, n_nodes: int) -> QueryGraph | None:
-    start = int(rng.integers(g.n_nodes))
-    nodes, edges, seen = [start], [], {start}
-    stack = [start]
-    while stack and len(nodes) < n_nodes:
-        v = stack.pop()
-        for u in g.neighbors(v):
-            u = int(u)
-            if u not in seen and len(nodes) < n_nodes:
-                seen.add(u)
-                nodes.append(u)
-                edges.append((v, u))
-                stack.append(u)
-    if len(nodes) < 2:
-        return None
-    remap = {v: i for i, v in enumerate(nodes)}
-    return QueryGraph.build(
-        [int(g.labels[v]) for v in nodes],
-        [(remap[a], remap[b]) for a, b in edges],
-    )
-
-
-def random_query(n_nodes, n_edges, n_labels, rng) -> QueryGraph:
-    edges = [(int(rng.integers(i)), i) for i in range(1, n_nodes)]
-    seen = {(min(a, b), max(a, b)) for a, b in edges}
-    tries = 0
-    while len(edges) < n_edges and tries < 10 * n_edges:
-        a, b = rng.integers(n_nodes, size=2)
-        tries += 1
-        key = (min(a, b), max(a, b))
-        if a != b and key not in seen:
-            seen.add(key)
-            edges.append((int(a), int(b)))
-    return QueryGraph.build(rng.integers(0, n_labels, n_nodes).astype(int).tolist(), edges)
-
-
 def patents_like(scale: float = 1.0, seed: int = 0):
     """US-Patents-shaped R-MAT: 3.77M nodes, 16.5M edges, 418 labels
     (scaled down by ``scale`` for CPU budgets)."""
@@ -70,12 +38,16 @@ def patents_like(scale: float = 1.0, seed: int = 0):
     return generators.rmat(n, m, 418, seed=seed)
 
 
-def build_matcher(g, n_shards: int = 1) -> SubgraphMatcher:
-    return SubgraphMatcher(PartitionedGraph.build(g, n_shards))
+def build_matcher(g, n_shards: int = 1) -> GraphSession:
+    """Open a `GraphSession` over ``g`` (name kept for the bench scripts)."""
+    return GraphSession.open(
+        PartitionedGraph.build(g, n_shards),
+        backend="local" if n_shards == 1 else "sharded",
+    )
 
 
 def avg_query_time(
-    m: SubgraphMatcher,
+    session: GraphSession,
     queries,
     *,
     max_matches: int = 1024,
@@ -86,7 +58,7 @@ def avg_query_time(
     times, counts = [], []
     for q in queries:
         t0 = time.perf_counter()
-        res = m.match(q, max_matches=max_matches, adaptive=adaptive)
+        res = session.run(q, max_matches=max_matches, adaptive=adaptive)
         times.append(time.perf_counter() - t0)
         counts.append(res.n_matches)
     return float(np.mean(times)), float(np.mean(counts))

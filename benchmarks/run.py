@@ -54,15 +54,13 @@ def main() -> None:
     }
     def _gc():
         # each query spec jit-compiles a fresh executable; without clearing,
-        # hundreds of cached executables exhaust the JIT code allocator
+        # hundreds of cached executables exhaust the JIT code allocator.
+        # Executable caches are session-owned now, so dropping the suites'
+        # sessions plus jax's trace caches is enough.
         import gc
 
         import jax
 
-        from repro.core import engine as engine_lib
-
-        engine_lib._jit_match.cache_clear()
-        engine_lib._jit_join.cache_clear()
         jax.clear_caches()
         gc.collect()
 

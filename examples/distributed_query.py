@@ -1,5 +1,6 @@
 """Distributed matching across 8 simulated machines (paper §4.3/§5.3):
-head-STwig locality, load sets from the cluster graph, disjoint unions.
+head-STwig locality, load sets from the cluster graph, disjoint unions —
+all behind the same `GraphSession` facade as the local engine.
 
     PYTHONPATH=src python examples/distributed_query.py
 """
@@ -7,13 +8,9 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
-import numpy as np  # noqa: E402
-import jax  # noqa: E402
-from jax.sharding import Mesh  # noqa: E402
-
+from repro.api import GraphSession  # noqa: E402
 from repro.core import QueryGraph  # noqa: E402
-from repro.core.dist import DistributedMatcher  # noqa: E402
-from repro.graphstore import ClusterGraphIndex, PartitionedGraph, generators  # noqa: E402
+from repro.graphstore import PartitionedGraph, generators  # noqa: E402
 
 
 def main() -> None:
@@ -21,12 +18,13 @@ def main() -> None:
     # so load sets exclude far machines (Theorem 4 with teeth)
     g = generators.ring_of_cliques(n_cliques=8, clique_size=12, n_labels=4, seed=0)
     pg = PartitionedGraph.build(g, 8, mode="range")
-    mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
-    dm = DistributedMatcher(pg, mesh)
+    session = GraphSession.open(pg)  # backend="auto" → sharded over 8 devices
+    print(session)
 
     q = QueryGraph.build(labels=[0, 1, 2, 3], edges=[(0, 1), (1, 2), (2, 3), (0, 2)])
-    plan = dm.plan(q)
-    load = dm.cgi.load_sets(q.label_pairs(), plan.head_dists)
+    compiled = session.compile(q, max_matches=0)
+    plan = compiled.plan
+    load = session.engine.cgi.load_sets(q.label_pairs(), plan.head_dists)
     print("head STwig:", plan.head, "head distances:", plan.head_dists)
     for t in range(load.shape[0]):
         sizes = load[t].sum(axis=1)
@@ -35,8 +33,8 @@ def main() -> None:
             + ("   (head: local only)" if t == plan.head else "")
         )
 
-    res = dm.match(q, max_matches=0)
-    print(f"\n{res.n_matches} matches across {res.stats['n_shards']} machines "
+    res = compiled.run()
+    print(f"\n{res.n_matches} matches across {res.stats.n_shards} machines "
           f"(complete={res.complete}); no deduplication was performed.")
     rows = {tuple(r) for r in res.rows.tolist()}
     assert len(rows) == res.n_matches, "disjointness guarantee violated!"

@@ -1,18 +1,23 @@
-"""Quickstart: build a labeled graph, plan a query with Algorithm 2, match.
+"""Quickstart: the `GraphSession` facade — open a graph, compile a query
+(Algorithm 2 planning + static capacities), run it, stream it.
 
     PYTHONPATH=src python examples/quickstart.py
-"""
-import numpy as np
 
-from repro.core import QueryGraph, SubgraphMatcher, stwig_order_selection
-from repro.graphstore import PartitionedGraph, generators
+`GraphSession.open` picks the right engine (local here; sharded when a mesh
+or a multi-shard partition is given), `session.compile` plans once, and the
+compiled query can be run one-shot or streamed page-by-page with the
+paper's pipelined first-K semantics (§6.1).
+"""
+from repro.api import GraphSession
+from repro.core import QueryGraph, stwig_order_selection
+from repro.graphstore import generators
 
 
 def main() -> None:
     # an R-MAT graph standing in for a real labeled network
     g = generators.rmat(n_nodes=2000, n_edges=8000, n_labels=24, seed=0)
-    pg = PartitionedGraph.build(g, n_shards=1)
-    matcher = SubgraphMatcher(pg)
+    session = GraphSession.open(g)  # backend="auto" → local, 1 shard
+    print(session)
 
     # the paper's running example shape: a 6-node query
     #     a - b - d - e      (labels are ints)
@@ -23,20 +28,29 @@ def main() -> None:
         edges=[(0, 1), (1, 2), (1, 3), (3, 4), (3, 5)],
     )
 
-    dec = stwig_order_selection(q, pg.freq)
+    dec = stwig_order_selection(q, session.pg.freq)
     print("STwig decomposition (Algorithm 2):")
     for t in dec.stwigs:
         print(f"  root q{t.root} (label {t.root_label}) -> children {t.children}")
 
-    # the paper's pipelined serving semantics: first 1024 matches (§6.1)
-    res = matcher.match(q, max_matches=1024, adaptive=False)
+    # compile once; run with the paper's pipelined serving semantics:
+    # first 1024 matches (§6.1)
+    compiled = session.compile(q, max_matches=1024)
+    res = compiled.run(adaptive=False)
     print(f"\n{res.n_matches} matches (complete={res.complete})")
     print("first rows (query-node order):")
     for row in res.rows[:5]:
         print("  ", row)
-    print("\nper-STwig candidate rows:", res.stats["stwig_rows"])
-    print("join order:", res.stats["join_order"])
-    print(f"query time: {res.stats['time_s']*1e3:.1f} ms")
+    print("\nper-STwig candidate rows:", res.stats.stwig_rows)
+    print("join order:", res.stats.join_order)
+    print(f"query time: {res.stats.time_s*1e3:.1f} ms")
+
+    # streaming delivery: pages arrive as join blocks finish, and stopping
+    # early skips the remaining blocks' work entirely
+    total = 0
+    for page in compiled.stream(page_size=256, max_matches=512):
+        total += page.rows.shape[0]
+        print(f"  page {page.index}: {page.rows.shape[0]} rows (running total {total})")
 
     # cross-check a row
     for row in res.rows[: min(3, len(res.rows))]:

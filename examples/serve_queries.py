@@ -1,8 +1,10 @@
 """End-to-end driver (the paper's kind: online subgraph-query serving).
 
 Builds a patents-shaped graph, then serves a mixed workload of DFS + random
-queries with the paper's pipeline semantics (first 1024 matches per query),
-reporting throughput and latency percentiles.
+queries through the `GraphSession` facade with the paper's pipeline
+semantics (first 1024 matches per query), reporting throughput and latency
+percentiles. `run_batch` amortizes compilation across the workload: queries
+with identical STwig specs share jitted executables via the session cache.
 
     PYTHONPATH=src python examples/serve_queries.py [--n-queries 40]
 """
@@ -11,44 +13,9 @@ import time
 
 import numpy as np
 
-from repro.core import SubgraphMatcher, QueryGraph
-from repro.graphstore import PartitionedGraph, generators
-
-
-def dfs_query(g, rng, nq):
-    start = int(rng.integers(g.n_nodes))
-    nodes, edges, seen = [start], [], {start}
-    stack = [start]
-    while stack and len(nodes) < nq:
-        v = stack.pop()
-        for u in g.neighbors(v):
-            u = int(u)
-            if u not in seen and len(nodes) < nq:
-                seen.add(u)
-                nodes.append(u)
-                edges.append((v, u))
-                stack.append(u)
-    if len(nodes) < 2:
-        return None
-    remap = {v: i for i, v in enumerate(nodes)}
-    return QueryGraph.build(
-        [int(g.labels[v]) for v in nodes],
-        [(remap[a], remap[b]) for a, b in edges],
-    )
-
-
-def random_query(nq, ne, n_labels, rng):
-    edges = [(int(rng.integers(i)), i) for i in range(1, nq)]
-    seen = {(min(a, b), max(a, b)) for a, b in edges}
-    while len(edges) < ne:
-        a, b = rng.integers(nq, size=2)
-        key = (min(a, b), max(a, b))
-        if a != b and key not in seen:
-            seen.add(key)
-            edges.append((int(a), int(b)))
-        else:
-            break
-    return QueryGraph.build(rng.integers(0, n_labels, nq).astype(int).tolist(), edges)
+from repro.api import GraphSession
+from repro.graphstore import generators
+from repro.workloads import mixed_workload
 
 
 def main() -> None:
@@ -62,26 +29,17 @@ def main() -> None:
     print(f"loading graph: {args.nodes} nodes, deg {args.degree} ...")
     t0 = time.perf_counter()
     g = generators.rmat(args.nodes, args.degree * args.nodes, args.labels, seed=0)
-    pg = PartitionedGraph.build(g, 1)
+    session = GraphSession.open(g, backend="local")
     print(f"loaded in {time.perf_counter()-t0:.1f}s ({g.n_edges} edges)")
-    matcher = SubgraphMatcher(pg)
 
     rng = np.random.default_rng(0)
-    workload = []
-    for i in range(args.n_queries):
-        q = (
-            dfs_query(g, rng, int(rng.integers(4, 8)))
-            if i % 2 == 0
-            else random_query(int(rng.integers(4, 8)), 8, args.labels, rng)
-        )
-        if q is not None:
-            workload.append(q)
+    workload = mixed_workload(g, args.n_queries, n_labels=args.labels, rng=rng)
 
     lat, matched = [], 0
     t0 = time.perf_counter()
     for q in workload:
         s = time.perf_counter()
-        res = matcher.match(q, max_matches=1024, adaptive=False)
+        res = session.run(q, max_matches=1024, adaptive=False)
         lat.append(time.perf_counter() - s)
         matched += res.n_matches
     wall = time.perf_counter() - t0
@@ -91,8 +49,10 @@ def main() -> None:
           f"({len(workload)/wall:.2f} qps, {matched} total matches)")
     print(f"latency p50={lat_ms[len(lat)//2]:.0f}ms "
           f"p90={lat_ms[int(len(lat)*0.9)]:.0f}ms p99={lat_ms[-1]:.0f}ms")
+    print(f"executable cache: {session.cache.hits} hits, "
+          f"{session.cache.misses} misses over the workload")
     print("(first-query latencies include jit compiles; steady-state "
-          "queries reuse the plan-spec compile cache)")
+          "queries reuse the session's executable cache)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,31 @@
+"""`repro.api` — the unified query facade (the paper's query proxy, §6.1).
+
+One entry point over both engines, with an explicit compile/run split::
+
+    from repro.api import GraphSession
+
+    sess = GraphSession.open(graph)                 # backend="auto"
+    cq = sess.compile(query, max_matches=1024)      # plan + cache key
+    res = cq.run(adaptive=False)                    # MatchResult
+    for page in cq.stream(page_size=256):           # pipelined first-K
+        ...
+    results = sess.run_batch(queries)               # amortized compiles
+
+`GraphSession` selects and wraps the right engine (`SubgraphMatcher` or
+`DistributedMatcher`), owns the keyed `ExecutableCache` that used to hide in
+module-level ``lru_cache`` state, and returns typed `MatchResult` /
+`MatchStats` objects instead of raw dicts.
+"""
+from repro.api.compiled import CompiledQuery
+from repro.api.session import GraphSession
+from repro.core.cache import ExecutableCache
+from repro.core.result import MatchPage, MatchResult, MatchStats
+
+__all__ = [
+    "GraphSession",
+    "CompiledQuery",
+    "ExecutableCache",
+    "MatchResult",
+    "MatchStats",
+    "MatchPage",
+]

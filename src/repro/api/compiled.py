@@ -1,0 +1,122 @@
+"""`CompiledQuery`: the run side of the compile/run split.
+
+Compilation (planning + executable cache keys) happens once in
+`GraphSession.compile`; a `CompiledQuery` can then be run repeatedly —
+one-shot (`run`), or streamed in pages with the paper's pipelined first-K
+semantics (`stream`). Adaptive capacity growth recompiles escalated plans
+through the same session cache, so retries reuse every executable whose
+static spec survived the escalation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Iterator
+
+import numpy as np
+
+from repro.core.engine import grow_caps
+from repro.core.plan import QueryPlan
+from repro.core.query import QueryGraph
+from repro.core.result import MatchPage, MatchResult
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.api.session import GraphSession
+
+
+@dataclasses.dataclass
+class CompiledQuery:
+    """A planned query bound to its session. Reusable and cheap to rerun."""
+
+    session: "GraphSession"
+    query: QueryGraph
+    plan: QueryPlan
+    caps: dict
+
+    def run(
+        self,
+        *,
+        max_matches: int | None = None,
+        adaptive: bool = True,
+        max_retries: int = 6,
+        **engine_kw,
+    ) -> MatchResult:
+        """Execute the compiled plan.
+
+        ``max_matches`` overrides the compiled plan's value (0 = all
+        matches) without replanning. With ``adaptive=True``, a capacity
+        overflow re-plans with doubled block sizes (paper §4.2) and reruns,
+        up to ``max_retries`` times; ``adaptive=False`` returns the first,
+        possibly partial, result — the paper's first-K semantics.
+        ``engine_kw`` passes backend-specific options through (e.g.
+        ``use_ring=True`` on the sharded backend).
+        """
+        plan = self.plan
+        if max_matches is not None and max_matches != plan.max_matches:
+            plan = dataclasses.replace(plan, max_matches=max_matches)
+        engine = self.session.engine
+        res = engine._match_once(self.query, plan=plan, **engine_kw)
+        retries = 0
+        caps = dict(self.caps)
+        while adaptive and not res.complete and retries < max_retries:
+            retries += 1
+            caps = grow_caps(caps, retries)
+            esc = self.session.replan(
+                self.query, **dict(caps, max_matches=plan.max_matches)
+            )
+            res = engine._match_once(self.query, plan=esc, **engine_kw)
+        res.stats.retries = retries
+        return res
+
+    def stream(
+        self,
+        page_size: int = 256,
+        *,
+        max_matches: int | None = None,
+        block_rows: int | None = None,
+    ) -> Iterator[MatchPage]:
+        """Yield matches in pages of ``page_size`` rows as they materialize
+        (pipelined first-K delivery, §6.1). On the local backend the join
+        chain really runs block-by-block, so stopping early — e.g. after
+        ``max_matches`` rows, which is enforced here when set — skips the
+        remaining blocks' work entirely. Pages are disjoint and their
+        concatenation equals a one-shot ``run(max_matches=0)`` row set.
+        """
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        limit = self.plan.max_matches if max_matches is None else max_matches
+        engine = self.session.engine
+        blocks = engine.match_stream(
+            self.query, self.plan, block_rows=block_rows or max(page_size, 1024)
+        )
+        buf: list[np.ndarray] = []
+        buffered = 0
+        emitted = 0
+        index = 0
+        complete = True
+
+        def page(rows: np.ndarray, complete: bool) -> MatchPage:
+            nonlocal index, emitted
+            p = MatchPage(rows=rows, index=index, complete=complete)
+            index += 1
+            emitted += rows.shape[0]
+            return p
+
+        for blk in blocks:
+            complete &= blk.complete
+            buf.append(blk.rows)
+            buffered += blk.rows.shape[0]
+            while buffered >= page_size or (limit and emitted + buffered >= limit):
+                # never exceed the limit, even mid-full-page
+                take = page_size if not limit else min(page_size, limit - emitted)
+                flat = np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
+                head, tail = flat[:take], flat[take:]
+                buf, buffered = ([tail], tail.shape[0]) if tail.shape[0] else ([], 0)
+                yield page(head, complete)
+                if limit and emitted >= limit:
+                    return  # early exit: remaining blocks are never joined
+        if buffered:
+            flat = np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
+            if limit:
+                flat = flat[: max(0, limit - emitted)]
+            if flat.shape[0]:
+                yield page(flat, complete)

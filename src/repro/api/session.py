@@ -1,0 +1,161 @@
+"""`GraphSession`: one facade over the local and distributed engines.
+
+The session is the unit of engine state: it owns the partitioned graph, the
+backend engine, and the keyed `ExecutableCache` shared by every query
+compiled in it — so a workload of similar queries pays each jit trace once,
+and the cache dies with the session instead of living in module globals.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.api.compiled import CompiledQuery
+from repro.core.cache import ExecutableCache
+from repro.core.engine import SubgraphMatcher
+from repro.core.plan import QueryPlan
+from repro.core.query import QueryGraph
+from repro.core.result import MatchResult
+from repro.graphstore.csr import Graph
+from repro.graphstore.partition import PartitionedGraph
+
+BACKENDS = ("auto", "local", "sharded")
+
+
+class GraphSession:
+    """A query session over one graph. Use `GraphSession.open`, not the
+    constructor. Usable as a context manager; `close()` drops the executable
+    cache."""
+
+    def __init__(self, pg: PartitionedGraph, engine, backend: str, cache: ExecutableCache):
+        self.pg = pg
+        self.backend = backend
+        self.cache = cache
+        self._engine = engine
+
+    # ------------------------------------------------------------- factory
+    @classmethod
+    def open(
+        cls,
+        graph_or_pg: Graph | PartitionedGraph,
+        *,
+        backend: str = "auto",
+        n_shards: int | None = None,
+        mesh=None,
+        partition_mode: str = "hash",
+        cache_size: int = 512,
+    ) -> "GraphSession":
+        """Open a session, selecting and wrapping the right engine.
+
+        ``backend="auto"`` picks "sharded" when a mesh is given or the
+        partition has multiple shards (and enough devices exist), else
+        "local". A raw `Graph` is partitioned here: into 1 shard for the
+        local backend, ``n_shards`` (default: all devices) for sharded.
+        """
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        import jax
+
+        n_dev = len(jax.devices())
+        if backend == "auto":
+            if mesh is not None:
+                backend = "sharded"
+            elif isinstance(graph_or_pg, PartitionedGraph):
+                pg_shards = graph_or_pg.n_shards
+                if pg_shards > n_dev:
+                    raise ValueError(
+                        f"partition has {pg_shards} shards but only {n_dev} "
+                        f"device(s) are available — re-partition to ≤{n_dev} "
+                        "shards (1 for the local backend) or add devices"
+                    )
+                backend = "sharded" if pg_shards > 1 else "local"
+            elif n_shards is not None and n_shards > 1:
+                backend = "sharded"
+            else:
+                backend = "local"
+
+        if isinstance(graph_or_pg, PartitionedGraph):
+            pg = graph_or_pg
+        else:
+            if backend == "local":
+                shards = 1
+            else:
+                shards = n_shards or (mesh.devices.size if mesh is not None else n_dev)
+            pg = PartitionedGraph.build(graph_or_pg, shards, mode=partition_mode)
+
+        cache = ExecutableCache(maxsize=cache_size)
+        if backend == "local":
+            if pg.n_shards != 1:
+                raise ValueError(
+                    f"local backend needs a 1-shard partition, got {pg.n_shards} "
+                    "shards (use backend='sharded' or re-partition)"
+                )
+            engine = SubgraphMatcher(pg, cache=cache)
+        else:
+            from jax.sharding import Mesh
+
+            from repro.core.dist import DistributedMatcher
+
+            if mesh is None:
+                if pg.n_shards > n_dev:
+                    raise ValueError(
+                        f"sharded backend needs ≥{pg.n_shards} devices, have {n_dev}"
+                    )
+                mesh = Mesh(np.array(jax.devices()[: pg.n_shards]), ("data",))
+            engine = DistributedMatcher(pg, mesh, cache=cache)
+        return cls(pg, engine, backend, cache)
+
+    # ----------------------------------------------------------- query API
+    def compile(self, query: QueryGraph, **caps) -> CompiledQuery:
+        """Plan ``query`` (Algorithm 2 + head selection + static capacities)
+        without running it. ``caps`` are `make_plan` keywords (``child_cap``,
+        ``join_rows_cap``, ``max_matches``, ...). Executables are built
+        lazily on first run and cached in the session by their static spec,
+        so recompiling an identical query is free."""
+        plan = self._engine.plan(query, **caps)
+        return CompiledQuery(session=self, query=query, plan=plan, caps=caps)
+
+    def run(self, query: QueryGraph, *, adaptive: bool = True, **caps) -> MatchResult:
+        """One-shot convenience: ``compile(query).run()``."""
+        return self.compile(query, **caps).run(adaptive=adaptive)
+
+    def run_batch(
+        self,
+        queries: Sequence[QueryGraph] | Iterable[QueryGraph],
+        *,
+        adaptive: bool = True,
+        **caps,
+    ) -> list[MatchResult]:
+        """Run a workload, amortizing compilation: all queries are planned
+        up front and executed against the shared executable cache, so
+        queries with identical STwig specs / join schemas reuse each other's
+        jitted programs. Results are returned in input order and are
+        identical to sequential `run` calls."""
+        compiled = [self.compile(q, **caps) for q in queries]
+        return [cq.run(adaptive=adaptive) for cq in compiled]
+
+    # ------------------------------------------------------------ plumbing
+    @property
+    def engine(self):
+        """The wrapped backend engine (for low-level access; prefer the
+        facade methods)."""
+        return self._engine
+
+    def replan(self, query: QueryGraph, **caps) -> QueryPlan:
+        return self._engine.plan(query, **caps)
+
+    def close(self) -> None:
+        self.cache.clear()
+
+    def __enter__(self) -> "GraphSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"GraphSession(backend={self.backend!r}, n_shards={self.pg.n_shards}, "
+            f"cache={len(self.cache)} executables)"
+        )

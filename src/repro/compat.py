@@ -1,0 +1,39 @@
+"""Version compatibility shims for the installed jax.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the ``jax``
+namespace (and its replication-check kwarg was renamed ``check_rep`` →
+``check_vma``) across jax releases. Everything in this repo imports it from
+here so the same source runs on both sides of the move.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.6: public API, kwarg is check_vma
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x: experimental API, kwarg is check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` with a stable signature across jax versions."""
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        **{_CHECK_KW: check_vma},
+    )
+
+
+def axis_size(axis_name) -> int:
+    """Static mesh-axis size inside a mapped computation. ``lax.axis_size``
+    is recent; older jax constant-folds ``psum(1, axis)`` to the same int."""
+    from jax import lax
+
+    try:
+        return lax.axis_size(axis_name)
+    except AttributeError:
+        return lax.psum(1, axis_name)

@@ -4,8 +4,13 @@ Public API:
     QueryGraph, STwig            — query model (§2.1, §4.1)
     stwig_order_selection        — Algorithm 2 (decomposition + ordering)
     make_plan / QueryPlan        — static capacity planning
-    SubgraphMatcher              — single-shard engine
+    MatchResult / MatchStats     — typed results (repro.core.result)
+    ExecutableCache              — session-owned jit cache (repro.core.cache)
+    SubgraphMatcher              — single-shard engine (prefer repro.api)
     DistributedMatcher           — shard_map engine w/ head-STwig + load sets
+
+The preferred entry point is `repro.api.GraphSession`, a facade over both
+engines with an explicit compile/run split.
 """
 from repro.core.query import QueryGraph, STwig
 from repro.core.decompose import (
@@ -15,7 +20,9 @@ from repro.core.decompose import (
     stwig_order_selection,
 )
 from repro.core.plan import QueryPlan, STwigSpec, make_plan
-from repro.core.engine import MatchResult, SubgraphMatcher
+from repro.core.cache import ExecutableCache
+from repro.core.result import MatchPage, MatchResult, MatchStats
+from repro.core.engine import SubgraphMatcher
 
 __all__ = [
     "QueryGraph",
@@ -27,6 +34,9 @@ __all__ = [
     "QueryPlan",
     "STwigSpec",
     "make_plan",
+    "ExecutableCache",
     "MatchResult",
+    "MatchStats",
+    "MatchPage",
     "SubgraphMatcher",
 ]

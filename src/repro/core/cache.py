@@ -1,0 +1,52 @@
+"""Session-owned executable cache.
+
+Replaces the module-level ``functools.lru_cache`` jit state the engines used
+to keep: a `GraphSession` (or a standalone matcher) owns one
+`ExecutableCache`, so compiled executables have an explicit lifetime, can be
+shared across a batch of queries, and expose hit/miss counters instead of
+hiding behind process-global state.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Hashable
+
+
+class ExecutableCache:
+    """A keyed LRU cache for jitted executables (and their static metadata).
+
+    Keys must be hashable — in practice tuples of static plan state
+    (`STwigSpec`, schemas, capacities), exactly what used to key the
+    ``lru_cache`` decorators.
+    """
+
+    def __init__(self, maxsize: int = 512):
+        self.maxsize = int(maxsize)
+        self._data: OrderedDict[Hashable, Any] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
+        """Return the cached value for ``key``, building (and storing) it on
+        a miss. The least-recently-used entry is evicted past ``maxsize``."""
+        try:
+            value = self._data[key]
+        except KeyError:
+            self.misses += 1
+            value = build()
+            self._data[key] = value
+            if len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+            return value
+        self._data.move_to_end(key)
+        self.hits += 1
+        return value
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._data

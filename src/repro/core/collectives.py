@@ -20,10 +20,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
 
 def or_allreduce(words: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     """Bitwise-OR all-reduce across a mesh axis."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return words
     if n & (n - 1) == 0:
@@ -52,7 +54,7 @@ def gather_load_set(
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fetch remote STwig tables, keeping rows only from shards in this
     shard's load set. cols (cap, w), valid (cap,), load_row (S,) bool."""
-    S = lax.axis_size(axis_name)
+    S = axis_size(axis_name)
     g_cols = lax.all_gather(cols, axis_name)          # (S, cap, w)
     g_valid = lax.all_gather(valid, axis_name)        # (S, cap)
     g_valid &= load_row[:, None]
@@ -74,7 +76,7 @@ def gather_load_set_ring(
     e.g. range partitioning of a graph with ring/band locality. The engine
     checks applicability host-side before selecting this path.
     """
-    S = lax.axis_size(axis_name)
+    S = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     h = min(max_dist, (S - 1) // 2)
     outs_c = [cols]

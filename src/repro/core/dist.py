@@ -7,13 +7,16 @@ all-reduce, fetches remote STwig tables bounded by its load set (Theorem 4),
 and joins locally. The head STwig (Theorem 5) is never fetched remotely, so
 per-shard result sets are provably disjoint — the final union needs no
 deduplication, exactly as in the paper.
+
+.. deprecated::
+    Constructing `DistributedMatcher` directly is deprecated — open a
+    `repro.api.GraphSession` with ``backend="sharded"`` instead.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -21,12 +24,15 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import join as join_lib
+from repro.core.cache import ExecutableCache
 from repro.core.collectives import gather_load_set, or_allreduce
-from repro.core.engine import MatchResult
+from repro.core.engine import MatchResult, grow_caps
 from repro.core.match import Bindings, ShardGraph, match_stwig_shard
 from repro.core.plan import QueryPlan, STwigSpec, make_plan
 from repro.core.query import QueryGraph
+from repro.core.result import MatchPage, MatchStats
 from repro.graphstore.cluster_graph import ClusterGraphIndex
 from repro.graphstore.partition import PartitionedGraph
 
@@ -73,13 +79,14 @@ def _local_shard_graph(tree) -> ShardGraph:
     )
 
 
-@dataclasses.dataclass(eq=False)  # id-hash: lru_cached methods key on self
+@dataclasses.dataclass(eq=False)
 class DistributedMatcher:
     """The multi-machine engine. Requires len(mesh.devices) == pg.n_shards."""
 
     pg: PartitionedGraph
     mesh: Mesh
     cgi: ClusterGraphIndex = None  # type: ignore[assignment]
+    cache: ExecutableCache = None  # type: ignore[assignment]
 
     def __post_init__(self):
         assert self.mesh.devices.size == self.pg.n_shards, (
@@ -88,12 +95,18 @@ class DistributedMatcher:
         )
         if self.cgi is None:
             self.cgi = ClusterGraphIndex.build(self.pg)
+        if self.cache is None:
+            self.cache = ExecutableCache()
         self._g = _StackedGraph(self.pg, self.mesh)
         self._rep = NamedSharding(self.mesh, P())
 
     # ------------------------------------------------------- jitted steps
-    @functools.lru_cache(maxsize=512)
     def _match_step(self, spec: STwigSpec):
+        return self.cache.get(
+            ("dist_match", spec), lambda: self._build_match_step(spec)
+        )
+
+    def _build_match_step(self, spec: STwigSpec):
         gspecs = (P(AXIS),) * 6 + (P(),)
 
         def body(tree, bind_words, round_idx):
@@ -113,8 +126,6 @@ class DistributedMatcher:
                 overflow_any,
             )
 
-        from jax import shard_map
-
         return jax.jit(
             shard_map(
                 body,
@@ -127,7 +138,6 @@ class DistributedMatcher:
             )
         )
 
-    @functools.lru_cache(maxsize=256)
     def _join_step(
         self,
         schemas: tuple,
@@ -137,6 +147,17 @@ class DistributedMatcher:
         dup_cap: int,
         caps: tuple[int, ...],
         ring_radii: tuple[int, ...] | None = None,
+    ):
+        key = ("dist_join", schemas, order, head_pos, out_cap, dup_cap, caps, ring_radii)
+        return self.cache.get(
+            key,
+            lambda: self._build_join_step(
+                schemas, order, head_pos, out_cap, dup_cap, ring_radii
+            ),
+        )
+
+    def _build_join_step(
+        self, schemas, order, head_pos, out_cap, dup_cap, ring_radii
     ):
         """One shard_map'd function running the whole join phase per shard.
 
@@ -183,8 +204,6 @@ class DistributedMatcher:
                 )
             return acc.cols[None], acc.valid[None], acc.n_rows[None], acc.overflow[None]
 
-        from jax import shard_map
-
         return jax.jit(
             shard_map(
                 body,
@@ -228,26 +247,53 @@ class DistributedMatcher:
         retries = 0
         while adaptive and not res.complete and retries < max_retries:
             retries += 1
-            kw = dict(kw)
-            kw["child_cap"] = 2 * kw.get("child_cap", 8) * retries
-            kw["join_rows_cap"] = 4 * kw.get("join_rows_cap", 1 << 16)
-            kw["join_dup_cap"] = 4 * kw.get("join_dup_cap", 64)
+            kw = grow_caps(kw, retries)
             res = self._match_once(query, **kw)
-        res.stats["retries"] = retries
+        res.stats.retries = retries
         return res
 
+    def match_stream(
+        self,
+        query: QueryGraph,
+        plan: QueryPlan | None = None,
+        *,
+        block_rows: int = 1024,
+        **kw,
+    ) -> Iterator[MatchPage]:
+        """Streaming pages for the sharded backend.
+
+        The distributed join runs as one fused shard_map program, so blocks
+        cannot (yet) be cut inside it: this runs the query once without
+        truncation and pages the disjoint per-shard union host-side. The
+        page contract (disjoint pages whose union equals the one-shot run)
+        matches the local backend; per-block pipelining inside shard_map is
+        an open roadmap item.
+        """
+        if plan is not None:
+            plan = dataclasses.replace(plan, max_matches=0)
+        res = self._match_once(query, plan=plan, **dict(kw, max_matches=0))
+        B = max(1, block_rows)
+        for i, lo in enumerate(range(0, res.rows.shape[0], B)):
+            yield MatchPage(
+                rows=res.rows[lo : lo + B], index=i, complete=res.complete
+            )
+
     def _match_once(
-        self, query: QueryGraph, use_ring: bool = False, **kw
+        self,
+        query: QueryGraph,
+        plan: QueryPlan | None = None,
+        use_ring: bool = False,
+        **kw,
     ) -> MatchResult:
         t0 = time.perf_counter()
-        plan = self.plan(query, **kw)
+        plan = plan or self.plan(query, **kw)
         S = self.pg.n_shards
         n_bits = self.pg.n_total + 1
         bind = jax.device_put(
             Bindings.fresh(plan.n_qnodes, n_bits).words, self._rep
         )
 
-        stats: dict[str, Any] = {"stwig_rows": [], "stwig_roots": [], "rounds": []}
+        stats = MatchStats(backend="sharded", n_shards=S)
         overflow = False
         all_cols, all_valids = [], []
         for spec in plan.specs:
@@ -276,8 +322,8 @@ class DistributedMatcher:
             # concatenate rounds along the per-shard row axis
             all_cols.append(jnp.concatenate(round_cols, axis=1))
             all_valids.append(jnp.concatenate(round_valids, axis=1))
-            stats["stwig_rows"].append(n_rows_tot)
-            stats["rounds"].append(r)
+            stats.stwig_rows.append(n_rows_tot)
+            stats.rounds.append(r)
 
         # ---- load sets (Theorem 4) ----------------------------------------
         load = self.cgi.load_sets(query.label_pairs(), plan.head_dists)
@@ -293,7 +339,7 @@ class DistributedMatcher:
             for s in plan.specs
         )
         order = tuple(
-            join_lib.select_join_order(list(schemas), stats["stwig_rows"])
+            join_lib.select_join_order(list(schemas), stats.stwig_rows)
         )
         caps = tuple(int(c.shape[1]) for c in all_cols)
         ring_radii = self.ring_radii_for(load) if use_ring else None
@@ -325,9 +371,10 @@ class DistributedMatcher:
             self.pg.new_to_old[np.minimum(rows_new, self.pg.n_total - 1)],
             -1,
         )
-        stats["time_s"] = time.perf_counter() - t0
-        stats["join_order"] = [schemas[i].qnodes for i in order]
-        stats["n_shards"] = S
+        stats.time_s = time.perf_counter() - t0
+        stats.join_order = [schemas[i].qnodes for i in order]
+        stats.cache_hits = self.cache.hits
+        stats.cache_misses = self.cache.misses
         return MatchResult(
             rows=rows_old.astype(np.int64),
             n_matches=int(rows_old.shape[0]),

@@ -1,21 +1,27 @@
 """Single-shard subgraph matching engine (the per-machine executor).
 
 Orchestration is host-side (the paper's query proxy); every dense step is a
-jitted JAX function cached by its static plan spec. The distributed engine
-(`repro.core.dist`) wraps the same match/join steps in ``shard_map``.
+jitted JAX function keyed by its static plan spec in a session-owned
+`ExecutableCache`. The distributed engine (`repro.core.dist`) wraps the same
+match/join steps in ``shard_map``.
+
+.. deprecated::
+    Constructing `SubgraphMatcher` directly is deprecated — open a
+    `repro.api.GraphSession` instead; it selects the backend, owns the
+    executable cache, and exposes the compile/run split.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import time
-from typing import Any
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import join as join_lib
+from repro.core.cache import ExecutableCache
 from repro.core.match import (
     Bindings,
     ShardGraph,
@@ -25,37 +31,20 @@ from repro.core.match import (
 )
 from repro.core.plan import QueryPlan, STwigSpec, make_plan
 from repro.core.query import QueryGraph
+from repro.core.result import MatchPage, MatchResult, MatchStats
 from repro.graphstore.partition import PartitionedGraph
 
-
-@dataclasses.dataclass
-class MatchResult:
-    rows: np.ndarray          # (n_matches, n_qnodes) ORIGINAL node ids
-    n_matches: int
-    complete: bool            # False if any capacity overflowed (partial set)
-    stats: dict[str, Any]
+__all__ = ["MatchResult", "MatchStats", "MatchPage", "SubgraphMatcher"]
 
 
-@functools.lru_cache(maxsize=512)
-def _jit_match(spec: STwigSpec):
-    return jax.jit(functools.partial(match_stwig_shard, spec=spec))
+def _concat_tables(tables: list[STwigTable]) -> join_lib.JoinTable:
+    """Concatenate per-round tables into one join input (host-orchestrated).
 
-
-@functools.lru_cache(maxsize=512)
-def _jit_join(schema_a, schema_b, out_cap: int, dup_cap: int):
-    """Returns (jitted join fn, merged schema). The schema is static — it
-    must not pass through jit."""
-    merged, _ = schema_a.merge(schema_b)
-    fn = jax.jit(
-        lambda a, b: join_lib.sort_merge_join(
-            a, b, schema_a, schema_b, out_cap=out_cap, dup_cap=dup_cap
-        )[0]
-    )
-    return fn, merged
-
-
-def _concat_tables(tables: list[STwigTable], rows_cap: int) -> join_lib.JoinTable:
-    """Concatenate per-round tables into one join input (host-orchestrated)."""
+    The concatenated capacity is ``n_rounds * spec.rows_cap`` — deliberately
+    larger than the per-round plan capacity: rounds exist precisely so one
+    round's block never overflows, and the join phase's own ``out_cap``
+    bounds everything downstream.
+    """
     cols = jnp.concatenate([t.cols for t in tables], axis=0)
     valid = jnp.concatenate([t.valid for t in tables], axis=0)
     n_rows = sum((t.n_rows for t in tables), jnp.int32(0))
@@ -65,12 +54,29 @@ def _concat_tables(tables: list[STwigTable], rows_cap: int) -> join_lib.JoinTabl
     return join_lib.JoinTable(cols=cols, valid=valid, n_rows=n_rows, overflow=overflow)
 
 
+def grow_caps(caps: dict, retries: int) -> dict:
+    """One step of adaptive capacity growth (paper §4.2: block sizes are set
+    by available memory; overflow doubles them and re-runs)."""
+    caps = dict(caps)
+    caps["child_cap"] = 2 * caps.get("child_cap", 8) * retries
+    caps["join_rows_cap"] = 4 * caps.get("join_rows_cap", 1 << 16)
+    caps["join_dup_cap"] = 4 * caps.get("join_dup_cap", 64)
+    return caps
+
+
 class SubgraphMatcher:
     """Single-device matcher over a (possibly 1-shard) partitioned graph."""
 
-    def __init__(self, pg: PartitionedGraph, shard: int = 0):
+    def __init__(
+        self,
+        pg: PartitionedGraph,
+        shard: int = 0,
+        *,
+        cache: ExecutableCache | None = None,
+    ):
         assert 0 <= shard < pg.n_shards
         self.pg = pg
+        self.cache = cache if cache is not None else ExecutableCache()
         self.g = ShardGraph(
             labels=jnp.asarray(pg.labels[shard]),
             indptr=jnp.asarray(pg.indptr[shard]),
@@ -81,6 +87,28 @@ class SubgraphMatcher:
             shard_id=jnp.int32(shard),
             all_labels=jnp.asarray(pg.all_labels),
         )
+
+    # -------------------------------------------------- cached executables
+    def _match_fn(self, spec: STwigSpec):
+        return self.cache.get(
+            ("match", spec),
+            lambda: jax.jit(functools.partial(match_stwig_shard, spec=spec)),
+        )
+
+    def _join_fn(self, schema_a, schema_b, out_cap: int, dup_cap: int):
+        """Returns (jitted join fn, merged schema). The schema is static — it
+        must not pass through jit."""
+
+        def build():
+            merged, _ = schema_a.merge(schema_b)
+            fn = jax.jit(
+                lambda a, b: join_lib.sort_merge_join(
+                    a, b, schema_a, schema_b, out_cap=out_cap, dup_cap=dup_cap
+                )[0]
+            )
+            return fn, merged
+
+        return self.cache.get(("join", schema_a, schema_b, out_cap, dup_cap), build)
 
     # ------------------------------------------------------------------ API
     def plan(self, query: QueryGraph, **kw) -> QueryPlan:
@@ -104,29 +132,81 @@ class SubgraphMatcher:
         retries = 0
         while adaptive and plan is None and not res.complete and retries < max_retries:
             retries += 1
-            kw = dict(kw)
-            kw["child_cap"] = 2 * kw.get("child_cap", 8) * retries
-            kw["join_rows_cap"] = 4 * kw.get("join_rows_cap", 1 << 16)
-            kw["join_dup_cap"] = 4 * kw.get("join_dup_cap", 64)
+            kw = grow_caps(kw, retries)
             res = self._match_once(query, None, **kw)
-        res.stats["retries"] = retries
+        res.stats.retries = retries
         return res
 
-    def _match_once(
-        self, query: QueryGraph, plan: QueryPlan | None = None, **kw
-    ) -> MatchResult:
-        t0 = time.perf_counter()
+    def match_stream(
+        self,
+        query: QueryGraph,
+        plan: QueryPlan | None = None,
+        *,
+        block_rows: int = 1024,
+        **kw,
+    ) -> Iterator[MatchPage]:
+        """Pipelined first-K execution (paper §6.1): after exploration, the
+        first table in join order is fed through the join chain in blocks of
+        ``block_rows`` rows and each block's matches are yielded as soon as
+        they materialize. A consumer that stops after K matches never pays
+        for the joins of the remaining blocks — unlike `match`, which joins
+        everything and truncates afterwards.
+
+        Blocks partition the first table's rows, and every output row of a
+        join descends from exactly one build-side row, so pages are disjoint
+        and their union over all blocks equals the one-shot join. Streaming
+        is inherently first-K: there is no adaptive retry, and a page whose
+        block overflowed a capacity reports ``complete=False``.
+        """
         plan = plan or self.plan(query, **kw)
+        stats = MatchStats(backend="local")
+        tables, schemas, explore_overflow = self._explore(plan, stats)
+        order = join_lib.select_join_order(schemas, stats.stwig_rows)
+
+        first = tables[order[0]]
+        cap = int(first.cols.shape[0])
+        B = max(1, min(block_rows, cap))
+        page_idx = 0
+        for lo in range(0, cap, B):
+            hi = min(cap, lo + B)
+            blk_valid = first.valid[lo:hi]
+            n_blk = int(jax.device_get(jnp.sum(blk_valid, dtype=jnp.int32)))
+            if n_blk == 0:
+                continue
+            acc = join_lib.JoinTable(
+                cols=first.cols[lo:hi],
+                valid=blk_valid,
+                n_rows=jnp.int32(n_blk),
+                overflow=jnp.bool_(False),
+            )
+            acc_schema = schemas[order[0]]
+            for idx in order[1:]:
+                fn, merged = self._join_fn(
+                    acc_schema, schemas[idx], plan.join_rows_cap, plan.join_dup_cap
+                )
+                acc, acc_schema = fn(acc, tables[idx]), merged
+            rows = self._materialize(acc, acc_schema, max_matches=0)
+            if rows.shape[0] == 0:
+                continue
+            yield MatchPage(
+                rows=rows,
+                index=page_idx,
+                complete=not (explore_overflow or bool(jax.device_get(acc.overflow))),
+            )
+            page_idx += 1
+
+    # ------------------------------------------------------ execution phases
+    def _explore(
+        self, plan: QueryPlan, stats: MatchStats
+    ) -> tuple[list[join_lib.JoinTable], list[join_lib.Schema], bool]:
+        """STwig exploration in Algorithm-2 order → per-STwig join inputs."""
         n_bits = self.pg.n_total + 1
         bind = Bindings.fresh(plan.n_qnodes, n_bits)
-
-        # ---- exploration: STwigs in Algorithm-2 order ----------------------
         tables: list[join_lib.JoinTable] = []
         schemas: list[join_lib.Schema] = []
-        stats: dict[str, Any] = {"stwig_rows": [], "stwig_roots": [], "rounds": []}
         overflow = False
         for spec in plan.specs:
-            fn = _jit_match(spec)
+            fn = self._match_fn(spec)
             round_tables: list[STwigTable] = []
             contrib = None
             r = 0
@@ -140,7 +220,7 @@ class SubgraphMatcher:
                 if r * spec.root_cap >= n_roots:
                     break
             bind = apply_binding_update(bind, spec, contrib)
-            jt = _concat_tables(round_tables, spec.rows_cap)
+            jt = _concat_tables(round_tables)
             tables.append(jt)
             schemas.append(
                 join_lib.Schema(
@@ -148,38 +228,57 @@ class SubgraphMatcher:
                     qlabels=(spec.root_label,) + spec.child_labels,
                 )
             )
-            stats["stwig_rows"].append(int(jt.n_rows))
-            stats["stwig_roots"].append(int(round_tables[0].n_roots))
-            stats["rounds"].append(r)
+            stats.stwig_rows.append(int(jt.n_rows))
+            stats.stwig_roots.append(int(round_tables[0].n_roots))
+            stats.rounds.append(r)
             overflow |= bool(jax.device_get(jt.overflow))
+        return tables, schemas, overflow
+
+    def _materialize(
+        self, acc: join_lib.JoinTable, acc_schema: join_lib.Schema, max_matches: int
+    ) -> np.ndarray:
+        """Device join table → host rows of ORIGINAL ids in query-node order."""
+        cols = np.asarray(jax.device_get(acc.cols))
+        valid = np.asarray(jax.device_get(acc.valid))
+        rows_new = cols[valid]
+        if max_matches and rows_new.shape[0] > max_matches:
+            rows_new = rows_new[:max_matches]
+        perm = np.argsort(np.asarray(acc_schema.qnodes))
+        rows_new = rows_new[:, perm]
+        rows_old = np.where(
+            rows_new < self.pg.n_total,
+            self.pg.new_to_old[np.minimum(rows_new, self.pg.n_total - 1)],
+            -1,
+        )
+        return rows_old.astype(np.int64)
+
+    def _match_once(
+        self, query: QueryGraph, plan: QueryPlan | None = None, **kw
+    ) -> MatchResult:
+        t0 = time.perf_counter()
+        plan = plan or self.plan(query, **kw)
+        stats = MatchStats(backend="local")
+        tables, schemas, overflow = self._explore(plan, stats)
 
         # ---- join phase ----------------------------------------------------
-        counts = stats["stwig_rows"]
-        order = join_lib.select_join_order(schemas, counts)
+        order = join_lib.select_join_order(schemas, stats.stwig_rows)
         acc, acc_schema = tables[order[0]], schemas[order[0]]
         for idx in order[1:]:
-            fn, merged = _jit_join(
+            fn, merged = self._join_fn(
                 acc_schema, schemas[idx], plan.join_rows_cap, plan.join_dup_cap
             )
             acc, acc_schema = fn(acc, tables[idx]), merged
         overflow |= bool(jax.device_get(acc.overflow))
 
         # ---- materialize (original ids, query-node column order) ----------
-        cols = np.asarray(jax.device_get(acc.cols))
-        valid = np.asarray(jax.device_get(acc.valid))
-        rows_new = cols[valid]
-        if plan.max_matches and rows_new.shape[0] > plan.max_matches:
-            rows_new = rows_new[: plan.max_matches]
-        perm = np.argsort(np.asarray(acc_schema.qnodes))
-        rows_new = rows_new[:, perm]
-        rows_old = np.where(
-            rows_new < self.pg.n_total, self.pg.new_to_old[np.minimum(rows_new, self.pg.n_total - 1)], -1
-        )
-        stats["join_order"] = [tuple(schemas[i].qnodes) for i in order]
-        stats["time_s"] = time.perf_counter() - t0
-        stats["n_join_rows"] = int(acc.n_rows)
+        rows_old = self._materialize(acc, acc_schema, plan.max_matches)
+        stats.join_order = [tuple(schemas[i].qnodes) for i in order]
+        stats.time_s = time.perf_counter() - t0
+        stats.n_join_rows = int(acc.n_rows)
+        stats.cache_hits = self.cache.hits
+        stats.cache_misses = self.cache.misses
         return MatchResult(
-            rows=rows_old.astype(np.int64),
+            rows=rows_old,
             n_matches=int(rows_old.shape[0]),
             complete=not overflow,
             stats=stats,

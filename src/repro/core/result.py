@@ -1,0 +1,60 @@
+"""Typed query results: `MatchResult`, structured `MatchStats`, `MatchPage`.
+
+The engines used to report execution details in an untyped ``stats`` dict;
+these dataclasses make the schema explicit. ``MatchStats`` still supports
+``stats["key"]`` access as a deprecation bridge for pre-facade callers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MatchStats:
+    """Execution statistics for one query run.
+
+    Per-STwig lists are indexed in exploration (Algorithm 2) order.
+    ``cache_hits``/``cache_misses`` are the owning executable cache's
+    cumulative counters at the end of the run (0 when no cache is attached).
+    """
+
+    backend: str = "local"             # "local" | "sharded"
+    time_s: float = 0.0
+    retries: int = 0                   # adaptive capacity-growth re-runs
+    rounds: list[int] = dataclasses.field(default_factory=list)
+    stwig_rows: list[int] = dataclasses.field(default_factory=list)
+    stwig_roots: list[int] = dataclasses.field(default_factory=list)
+    join_order: list[tuple[int, ...]] = dataclasses.field(default_factory=list)
+    n_join_rows: int = 0
+    n_shards: int = 1
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    # -------- deprecation bridge: the old dict-style access keeps working
+    def __getitem__(self, key: str):
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def get(self, key: str, default=None):
+        return getattr(self, key, default)
+
+
+@dataclasses.dataclass
+class MatchResult:
+    rows: np.ndarray          # (n_matches, n_qnodes) ORIGINAL node ids
+    n_matches: int
+    complete: bool            # False if any capacity overflowed (partial set)
+    stats: MatchStats
+
+
+@dataclasses.dataclass
+class MatchPage:
+    """One page of a streaming (first-K, pipelined) run."""
+
+    rows: np.ndarray          # (n_rows, n_qnodes) ORIGINAL node ids
+    index: int                # 0-based page number
+    complete: bool            # False if this page's block overflowed a cap

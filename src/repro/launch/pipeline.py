@@ -21,8 +21,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 def gpipe(

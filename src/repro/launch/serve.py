@@ -13,11 +13,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import GraphSession
 from repro.configs import get
 from repro.configs.base import LMConfig
-from repro.core import SubgraphMatcher
-from repro.graphstore import PartitionedGraph, generators
+from repro.graphstore import generators
 from repro.models import transformer as tf
+from repro.workloads import dfs_query
 
 
 def serve_stwig(args) -> None:
@@ -25,9 +26,8 @@ def serve_stwig(args) -> None:
     n = min(cfg.n_nodes, args.max_nodes)
     print(f"loading {n}-node graph ...")
     g = generators.rmat(n, cfg.avg_degree * n, cfg.n_labels, seed=0)
-    matcher = SubgraphMatcher(PartitionedGraph.build(g, 1))
+    session = GraphSession.open(g, backend="local")
     rng = np.random.default_rng(0)
-    from benchmarks.common import dfs_query
 
     served = 0
     t0 = time.perf_counter()
@@ -35,10 +35,11 @@ def serve_stwig(args) -> None:
         q = dfs_query(g, rng, 6)
         if q is None:
             continue
-        res = matcher.match(q, max_matches=cfg.max_matches, adaptive=False)
+        res = session.run(q, max_matches=cfg.max_matches, adaptive=False)
         served += 1
-        print(f"  query served: {res.n_matches} matches in {res.stats['time_s']*1e3:.0f} ms")
-    print(f"{served} queries in {time.perf_counter()-t0:.1f}s")
+        print(f"  query served: {res.n_matches} matches in {res.stats.time_s*1e3:.0f} ms")
+    print(f"{served} queries in {time.perf_counter()-t0:.1f}s "
+          f"(cache: {session.cache.hits} hits / {session.cache.misses} misses)")
 
 
 def serve_lm(args) -> None:

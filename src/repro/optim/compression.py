@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
 
 class EFState(NamedTuple):
     error: jnp.ndarray  # f32 residual carried between steps
@@ -32,7 +34,7 @@ def compressed_psum(
     axis_name: str,
 ) -> tuple[jnp.ndarray, EFState]:
     """Returns (mean-reduced gradient, new error-feedback state)."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     x = g.astype(jnp.float32) + ef.error
     absmax = jnp.max(jnp.abs(x))
     # shared scale across workers so int8 payloads sum correctly

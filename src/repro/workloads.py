@@ -1,0 +1,82 @@
+"""Query-workload generators (paper §6.1).
+
+The paper evaluates with queries sampled from the data graph (DFS queries —
+guaranteed at least one match) and random label/topology queries. These
+used to live in ``benchmarks.common``, which the serving launcher imported
+at runtime — a layering violation; they are library code and live here now.
+``benchmarks.common`` and ``tests/helpers.py`` re-export them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.query import QueryGraph
+from repro.graphstore.csr import Graph
+
+
+def dfs_query(g: Graph, rng: np.random.Generator, n_nodes: int) -> QueryGraph | None:
+    """Paper §6.1 DFS query: traverse from a random node, keep the first
+    ``n_nodes`` visited (None if the start node is too isolated)."""
+    start = int(rng.integers(g.n_nodes))
+    nodes, edges, seen = [start], [], {start}
+    stack = [start]
+    while stack and len(nodes) < n_nodes:
+        v = stack.pop()
+        for u in g.neighbors(v):
+            u = int(u)
+            if u not in seen and len(nodes) < n_nodes:
+                seen.add(u)
+                nodes.append(u)
+                edges.append((v, u))
+                stack.append(u)
+    if len(nodes) < 2:
+        return None
+    remap = {v: i for i, v in enumerate(nodes)}
+    return QueryGraph.build(
+        [int(g.labels[v]) for v in nodes],
+        [(remap[a], remap[b]) for a, b in edges],
+    )
+
+
+def random_query(
+    n_nodes: int, n_edges: int, n_labels: int, rng: np.random.Generator
+) -> QueryGraph:
+    """Random connected query: a random tree plus extra random edges, with
+    uniform random labels."""
+    edges = [(int(rng.integers(i)), i) for i in range(1, n_nodes)]
+    seen = {(min(a, b), max(a, b)) for a, b in edges}
+    tries = 0
+    while len(edges) < n_edges and tries < 10 * n_edges:
+        a, b = rng.integers(n_nodes, size=2)
+        tries += 1
+        key = (min(a, b), max(a, b))
+        if a != b and key not in seen:
+            seen.add(key)
+            edges.append((int(a), int(b)))
+    return QueryGraph.build(
+        rng.integers(0, n_labels, n_nodes).astype(int).tolist(), edges
+    )
+
+
+def mixed_workload(
+    g: Graph,
+    n_queries: int,
+    *,
+    n_labels: int,
+    rng: np.random.Generator,
+    min_nodes: int = 4,
+    max_nodes: int = 8,
+) -> list[QueryGraph]:
+    """The serving mix used in examples/benchmarks: alternate DFS (always
+    matchable) and random (often empty) queries."""
+    out: list[QueryGraph] = []
+    for i in range(n_queries):
+        nq = int(rng.integers(min_nodes, max_nodes))
+        q = (
+            dfs_query(g, rng, nq)
+            if i % 2 == 0
+            else random_query(nq, 8, n_labels, rng)
+        )
+        if q is not None:
+            out.append(q)
+    return out

@@ -1,11 +1,12 @@
-"""Shared test helpers: the networkx brute-force oracle + query generators."""
+"""Shared test helpers: the networkx brute-force oracle. Query generators
+come from `repro.workloads` (re-exported so tests keep one import site)."""
 from __future__ import annotations
 
 import networkx as nx
-import numpy as np
 
 from repro.core import QueryGraph
 from repro.graphstore.csr import Graph
+from repro.workloads import dfs_query, random_query  # noqa: F401  (re-export)
 
 
 def nx_oracle(g: Graph, q: QueryGraph) -> set[tuple[int, ...]]:
@@ -29,43 +30,3 @@ def nx_oracle(g: Graph, q: QueryGraph) -> set[tuple[int, ...]]:
         inv = {qn: dn for dn, qn in m.items()}
         out.add(tuple(inv[i] for i in range(q.n_nodes)))
     return out
-
-
-def dfs_query(g: Graph, rng: np.random.Generator, n_nodes: int) -> QueryGraph | None:
-    """Paper §6.1 DFS query: traverse from a random node, keep first N."""
-    start = int(rng.integers(g.n_nodes))
-    nodes, edges, seen = [start], [], {start}
-    stack = [start]
-    while stack and len(nodes) < n_nodes:
-        v = stack.pop()
-        for u in g.neighbors(v):
-            u = int(u)
-            if u not in seen and len(nodes) < n_nodes:
-                seen.add(u)
-                nodes.append(u)
-                edges.append((v, u))
-                stack.append(u)
-    if len(nodes) < 2:
-        return None
-    remap = {v: i for i, v in enumerate(nodes)}
-    return QueryGraph.build(
-        [int(g.labels[v]) for v in nodes],
-        [(remap[a], remap[b]) for a, b in edges],
-    )
-
-
-def random_query(
-    n_nodes: int, n_edges: int, n_labels: int, rng: np.random.Generator
-) -> QueryGraph:
-    """Paper §6.1 random query: spanning tree + random extra edges."""
-    edges = [(int(rng.integers(i)), i) for i in range(1, n_nodes)]
-    tries = 0
-    while len(edges) < n_edges and tries < 10 * n_edges:
-        a, b = rng.integers(n_nodes, size=2)
-        tries += 1
-        if a != b and (min(a, b), max(a, b)) not in {
-            (min(x, y), max(x, y)) for x, y in edges
-        }:
-            edges.append((int(a), int(b)))
-    labels = rng.integers(0, n_labels, n_nodes).astype(int).tolist()
-    return QueryGraph.build(labels, edges)

@@ -4,6 +4,7 @@ import itertools
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import QueryGraph, f_values, head_stwig_selection, stwig_order_selection

@@ -26,7 +26,7 @@ from repro.graphstore import PartitionedGraph, generators
 from repro.core import QueryGraph
 from repro.core.dist import DistributedMatcher
 from repro.core.collectives import or_allreduce
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 out = {}

@@ -1,5 +1,8 @@
 """Graph substrate: partition roundtrip, label index, bitsets (hypothesis)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.graphstore import (

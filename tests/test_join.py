@@ -1,6 +1,9 @@
 """Sort-merge join vs a brute-force oracle + join-order selection."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.join import JoinTable, Schema, select_join_order, sort_merge_join

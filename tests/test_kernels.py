@@ -3,6 +3,7 @@ with hypothesis shape/dtype sweeps as the brief requires."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 # ------------------------------------------------------------------ flash

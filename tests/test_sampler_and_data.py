@@ -1,5 +1,8 @@
 """Neighbor sampler invariants + data-pipeline determinism (hypothesis)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import LMConfig, RecSysConfig
