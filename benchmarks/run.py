@@ -8,6 +8,7 @@ prints ``name,us_per_call,derived`` CSV rows.
  Table 2 (graph loading)              bench_loading
  Fig 8(a,b,c) (query/edge size)       bench_query_size
  Fig 9 (speed-up vs machines)         bench_speedup
+ §6.1 (pipelined first-K streaming)   bench_stream
  Fig 10(a,b) (graph size)             bench_graph_size
  Fig 10(c) (graph density)            bench_density
  Fig 10(d) (label density)            bench_label_density
@@ -37,6 +38,7 @@ def main() -> None:
         bench_query_size,
         bench_roofline,
         bench_speedup,
+        bench_stream,
     )
 
     suites = {
@@ -46,6 +48,7 @@ def main() -> None:
         if args.fast
         else bench_query_size.main,
         "speedup": bench_speedup.main,
+        "stream": bench_stream.main,
         "graph_size": bench_graph_size.main,
         "density": bench_density.main,
         "label_density": bench_label_density.main,

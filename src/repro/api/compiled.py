@@ -18,6 +18,8 @@ from repro.core.engine import grow_caps
 from repro.core.plan import QueryPlan
 from repro.core.query import QueryGraph
 from repro.core.result import MatchPage, MatchResult
+from repro.core.stream import stream_blocks  # noqa: F401  (re-export: the
+# shared per-block streaming driver both engines and `stream` run on)
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.api.session import GraphSession
@@ -59,7 +61,7 @@ class CompiledQuery:
         caps = dict(self.caps)
         while adaptive and not res.complete and retries < max_retries:
             retries += 1
-            caps = grow_caps(caps, retries)
+            caps = grow_caps(caps)
             esc = self.session.replan(
                 self.query, **dict(caps, max_matches=plan.max_matches)
             )
@@ -73,29 +75,42 @@ class CompiledQuery:
         *,
         max_matches: int | None = None,
         block_rows: int | None = None,
+        **engine_kw,
     ) -> Iterator[MatchPage]:
         """Yield matches in pages of ``page_size`` rows as they materialize
-        (pipelined first-K delivery, §6.1). On the local backend the join
-        chain really runs block-by-block, so stopping early — e.g. after
-        ``max_matches`` rows, which is enforced here when set — skips the
-        remaining blocks' work entirely. Pages are disjoint and their
-        concatenation equals a one-shot ``run(max_matches=0)`` row set.
+        (pipelined first-K delivery, §6.1). On BOTH backends the join chain
+        really runs block-by-block — the sharded engine fetches remote STwig
+        tables once, then joins only head rows ``[lo, lo+block_rows)`` per
+        shard_map call — so stopping early (e.g. after ``max_matches`` rows,
+        enforced here when set) skips the remaining blocks' join work
+        entirely. Pages are disjoint and their concatenation equals a
+        one-shot ``run(max_matches=0)`` row set.
+
+        ``block_rows`` trades first-page latency for total throughput: each
+        block's join re-probes the full fetched tables, so tiny blocks make
+        the first page cheap but a fully-consumed stream expensive — prefer
+        `run` when you know you want every match.
         """
         if page_size < 1:
             raise ValueError("page_size must be >= 1")
         limit = self.plan.max_matches if max_matches is None else max_matches
-        engine = self.session.engine
-        blocks = engine.match_stream(
-            self.query, self.plan, block_rows=block_rows or max(page_size, 1024)
+        blocks = stream_blocks(
+            self.session.engine,
+            self.query,
+            self.plan,
+            block_rows=block_rows or max(page_size, 1024),
+            **engine_kw,
         )
         buf: list[np.ndarray] = []
         buffered = 0
         emitted = 0
         index = 0
         complete = True
+        incomplete_seen = False  # some emitted page already carries False
 
         def page(rows: np.ndarray, complete: bool) -> MatchPage:
-            nonlocal index, emitted
+            nonlocal index, emitted, incomplete_seen
+            incomplete_seen |= not complete
             p = MatchPage(rows=rows, index=index, complete=complete)
             index += 1
             emitted += rows.shape[0]
@@ -120,3 +135,7 @@ class CompiledQuery:
                 flat = flat[: max(0, limit - emitted)]
             if flat.shape[0]:
                 yield page(flat, complete)
+        if not complete and not incomplete_seen:
+            # a capacity overflowed but every emitted page predated the
+            # signal (or none had rows): surface it rather than swallow it
+            yield page(np.zeros((0, self.plan.n_qnodes), np.int64), False)

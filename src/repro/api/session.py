@@ -120,6 +120,28 @@ class GraphSession:
         """One-shot convenience: ``compile(query).run()``."""
         return self.compile(query, **caps).run(adaptive=adaptive)
 
+    def stream(
+        self,
+        query: QueryGraph,
+        *,
+        page_size: int = 256,
+        max_matches: int | None = None,
+        block_rows: int | None = None,
+        engine_kw: dict | None = None,
+        **caps,
+    ):
+        """One-shot convenience: ``compile(query).stream(...)`` — pipelined
+        first-K pages on either backend. ``block_rows`` is forwarded to
+        `CompiledQuery.stream` (the latency/throughput knob), ``engine_kw``
+        carries backend options (e.g. ``{"use_ring": True}``), and ``caps``
+        go to `compile`."""
+        return self.compile(query, **caps).stream(
+            page_size=page_size,
+            max_matches=max_matches,
+            block_rows=block_rows,
+            **(engine_kw or {}),
+        )
+
     def run_batch(
         self,
         queries: Sequence[QueryGraph] | Iterable[QueryGraph],

@@ -61,6 +61,24 @@ def gather_load_set(
     return g_cols.reshape(S * cols.shape[0], cols.shape[1]), g_valid.reshape(-1)
 
 
+def fetch_load_set(
+    cols: jnp.ndarray,
+    valid: jnp.ndarray,
+    load_row: jnp.ndarray,
+    axis_name: str,
+    *,
+    ring_radius: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One STwig-table fetch bounded by this shard's load set (Theorem 4):
+    the distance-bounded ring exchange when a radius is given (the engine
+    verified applicability host-side), the faithful all-gather otherwise.
+    Single dispatch point shared by the fused join and the per-block
+    streaming gather step."""
+    if ring_radius is not None:
+        return gather_load_set_ring(cols, valid, load_row, axis_name, ring_radius)
+    return gather_load_set(cols, valid, load_row, axis_name)
+
+
 def gather_load_set_ring(
     cols: jnp.ndarray,
     valid: jnp.ndarray,

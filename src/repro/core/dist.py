@@ -8,6 +8,12 @@ and joins locally. The head STwig (Theorem 5) is never fetched remotely, so
 per-shard result sets are provably disjoint — the final union needs no
 deduplication, exactly as in the paper.
 
+Two join paths share that structure: one fused shard_map program for
+one-shot `match` runs, and — for streaming (§6.1) — a run-once phase
+(exploration + load-set fetch, results cached on device per query) followed
+by a block-parameterized join step that joins only head rows ``[lo, lo+B)``
+per shard_map call, so early-stopping consumers skip the remaining blocks.
+
 .. deprecated::
     Constructing `DistributedMatcher` directly is deprecated — open a
     `repro.api.GraphSession` with ``backend="sharded"`` instead.
@@ -27,12 +33,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import join as join_lib
 from repro.core.cache import ExecutableCache
-from repro.core.collectives import gather_load_set, or_allreduce
-from repro.core.engine import MatchResult, grow_caps
+from repro.core.collectives import fetch_load_set, or_allreduce
+from repro.core.engine import MatchResult, caps_from_plan, grow_caps
 from repro.core.match import Bindings, ShardGraph, match_stwig_shard
 from repro.core.plan import QueryPlan, STwigSpec, make_plan
 from repro.core.query import QueryGraph
 from repro.core.result import MatchPage, MatchStats
+from repro.core.stream import stream_blocks
 from repro.graphstore.cluster_graph import ClusterGraphIndex
 from repro.graphstore.partition import PartitionedGraph
 
@@ -99,6 +106,9 @@ class DistributedMatcher:
             self.cache = ExecutableCache()
         self._g = _StackedGraph(self.pg, self.mesh)
         self._rep = NamedSharding(self.mesh, P())
+        # cumulative device invocations of the block-parameterized join step
+        # (the streaming path); lets callers assert early stops skip work
+        self.join_block_calls = 0
 
     # ------------------------------------------------------- jitted steps
     def _match_step(self, spec: STwigSpec):
@@ -174,15 +184,13 @@ class DistributedMatcher:
                 cols_i, valid_i = tables[i][0], valids[i][0]
                 if i == head_pos:
                     cols_f, valid_f = cols_i, valid_i
-                elif ring_radii is not None:
-                    from repro.core.collectives import gather_load_set_ring
-
-                    cols_f, valid_f = gather_load_set_ring(
-                        cols_i, valid_i, load[i], AXIS, ring_radii[i]
-                    )
                 else:
-                    cols_f, valid_f = gather_load_set(
-                        cols_i, valid_i, load[i], AXIS
+                    cols_f, valid_f = fetch_load_set(
+                        cols_i,
+                        valid_i,
+                        load[i],
+                        AXIS,
+                        ring_radius=None if ring_radii is None else ring_radii[i],
                     )
                 locs.append(
                     join_lib.JoinTable(
@@ -213,6 +221,151 @@ class DistributedMatcher:
             )
         )
 
+    def _gather_step(
+        self,
+        n_tables: int,
+        head_pos: int,
+        caps: tuple[int, ...],
+        ring_radii: tuple[int, ...] | None,
+    ):
+        key = ("dist_gather", n_tables, head_pos, caps, ring_radii)
+        return self.cache.get(
+            key, lambda: self._build_gather_step(n_tables, head_pos, ring_radii)
+        )
+
+    def _build_gather_step(self, n_tables, head_pos, ring_radii):
+        """Fetch every non-head STwig table, bounded by the per-shard load
+        sets (Theorem 4), in ONE shard_map program.
+
+        Run once per streamed query: the fetched tables are kept on device
+        and reused by every subsequent block-join call, so streaming pays
+        the communication cost once, not per block. The head table is never
+        fetched (Theorem 5) — that is what keeps per-shard pages disjoint.
+        """
+
+        def body(tables, valids, load_masks):
+            load = load_masks[0]
+            outs_c, outs_v = [], []
+            for i in range(n_tables):
+                if i == head_pos:
+                    continue
+                cols_f, valid_f = fetch_load_set(
+                    tables[i][0],
+                    valids[i][0],
+                    load[i],
+                    AXIS,
+                    ring_radius=None if ring_radii is None else ring_radii[i],
+                )
+                outs_c.append(cols_f[None])
+                outs_v.append(valid_f[None])
+            return tuple(outs_c), tuple(outs_v)
+
+        n_out = n_tables - 1
+        return jax.jit(
+            shard_map(
+                body,
+                mesh=self.mesh,
+                in_specs=(
+                    (P(AXIS),) * n_tables,
+                    (P(AXIS),) * n_tables,
+                    P(AXIS),
+                ),
+                out_specs=((P(AXIS),) * n_out, (P(AXIS),) * n_out),
+            )
+        )
+
+    def _join_block_step(
+        self,
+        schemas: tuple,
+        order: tuple[int, ...],
+        out_cap: int,
+        dup_cap: int,
+        head_cap: int,
+        gathered_caps: tuple[int, ...],
+        block_rows: int,
+    ):
+        key = (
+            "dist_join_block",
+            schemas,
+            order,
+            out_cap,
+            dup_cap,
+            head_cap,
+            gathered_caps,
+            block_rows,
+        )
+        return self.cache.get(
+            key,
+            lambda: self._build_join_block_step(
+                schemas, order, out_cap, dup_cap, block_rows
+            ),
+        )
+
+    def _build_join_block_step(self, schemas, order, out_cap, dup_cap, block_rows):
+        """The block-parameterized join step (paper §6.1 pipelining inside
+        shard_map): join only head-table rows ``[lo, lo+block_rows)`` against
+        the pre-fetched tables, one shard_map call per block.
+
+        ``lo`` is a replicated traced scalar, so one trace (cached per
+        (schemas, caps, block size) in the session's `ExecutableCache`)
+        serves every block of the query — blocks differ only in data. The
+        join order starts at the head STwig: blocks partition each shard's
+        local head rows, every output row descends from exactly one of them,
+        and the head is never fetched remotely (Theorem 5), so pages are
+        disjoint within a shard and across shards.
+        """
+        head_pos = order[0]
+        # position of each spec's table in the gathered (non-head) tuple
+        g_index = {
+            i: j
+            for j, i in enumerate(
+                i for i in range(len(schemas)) if i != head_pos
+            )
+        }
+
+        def body(head_cols, head_valid, g_cols, g_valids, lo):
+            head = join_lib.JoinTable(
+                cols=head_cols[0],
+                valid=head_valid[0],
+                n_rows=jnp.sum(head_valid[0], dtype=jnp.int32),
+                overflow=jnp.bool_(False),
+            )
+            acc = join_lib.block_table(head, lo, block_rows)
+            acc_schema = schemas[head_pos]
+            for idx in order[1:]:
+                j = g_index[idx]
+                tbl = join_lib.JoinTable(
+                    cols=g_cols[j][0],
+                    valid=g_valids[j][0],
+                    n_rows=jnp.sum(g_valids[j][0], dtype=jnp.int32),
+                    overflow=jnp.bool_(False),
+                )
+                acc, acc_schema = join_lib.sort_merge_join(
+                    acc,
+                    tbl,
+                    acc_schema,
+                    schemas[idx],
+                    out_cap=out_cap,
+                    dup_cap=dup_cap,
+                )
+            return acc.cols[None], acc.valid[None], acc.n_rows[None], acc.overflow[None]
+
+        n_g = len(schemas) - 1
+        return jax.jit(
+            shard_map(
+                body,
+                mesh=self.mesh,
+                in_specs=(
+                    P(AXIS),
+                    P(AXIS),
+                    (P(AXIS),) * n_g,
+                    (P(AXIS),) * n_g,
+                    P(),
+                ),
+                out_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+            )
+        )
+
     # ----------------------------------------------------------------- API
     def plan(self, query: QueryGraph, **kw) -> QueryPlan:
         return make_plan(query, self.pg.freq, **kw)
@@ -238,17 +391,19 @@ class DistributedMatcher:
     def match(
         self,
         query: QueryGraph,
+        plan: QueryPlan | None = None,
         *,
         adaptive: bool = True,
         max_retries: int = 6,
         **kw,
     ) -> MatchResult:
-        res = self._match_once(query, **kw)
+        res = self._match_once(query, plan=plan, **kw)
         retries = 0
+        caps = caps_from_plan(plan, kw) if plan is not None else dict(kw)
         while adaptive and not res.complete and retries < max_retries:
             retries += 1
-            kw = grow_caps(kw, retries)
-            res = self._match_once(query, **kw)
+            caps = grow_caps(caps)
+            res = self._match_once(query, **caps)
         res.stats.retries = retries
         return res
 
@@ -260,40 +415,113 @@ class DistributedMatcher:
         block_rows: int = 1024,
         **kw,
     ) -> Iterator[MatchPage]:
-        """Streaming pages for the sharded backend.
+        """Truly pipelined streaming for the sharded backend — thin wrapper
+        over the shared driver (`repro.core.stream.stream_blocks`), kept
+        for direct (deprecated) engine use.
 
-        The distributed join runs as one fused shard_map program, so blocks
-        cannot (yet) be cut inside it: this runs the query once without
-        truncation and pages the disjoint per-shard union host-side. The
-        page contract (disjoint pages whose union equals the one-shot run)
-        matches the local backend; per-block pipelining inside shard_map is
-        an open roadmap item.
-        """
-        if plan is not None:
-            plan = dataclasses.replace(plan, max_matches=0)
-        res = self._match_once(query, plan=plan, **dict(kw, max_matches=0))
-        B = max(1, block_rows)
-        for i, lo in enumerate(range(0, res.rows.shape[0], B)):
-            yield MatchPage(
-                rows=res.rows[lo : lo + B], index=i, complete=res.complete
-            )
+        Exploration and the load-set fetch run once; the per-block join step
+        then joins only head-table rows ``[lo, lo+block_rows)`` per
+        shard_map call, so a consumer that stops early never pays for the
+        remaining blocks' joins. The head STwig is never fetched remotely
+        (Theorem 5), so per-shard pages stay disjoint and their union equals
+        the one-shot run."""
+        yield from stream_blocks(self, query, plan, block_rows=block_rows, **kw)
 
-    def _match_once(
+    # -------------------------------------------------- streaming interface
+    def _stream_setup(
         self,
         query: QueryGraph,
         plan: QueryPlan | None = None,
         use_ring: bool = False,
         **kw,
-    ) -> MatchResult:
-        t0 = time.perf_counter()
+    ) -> "_ShardedStreamState":
+        """The run-once half of a streamed query: exploration, load sets and
+        the remote-table fetch all happen here; the returned state caches
+        the fetched tables on device for every subsequent block join."""
         plan = plan or self.plan(query, **kw)
-        S = self.pg.n_shards
-        n_bits = self.pg.n_total + 1
-        bind = jax.device_put(
-            Bindings.fresh(plan.n_qnodes, n_bits).words, self._rep
+        stats = MatchStats(backend="sharded", n_shards=self.pg.n_shards)
+        all_cols, all_valids, overflow = self._explore(plan, stats)
+        load, load_masks = self._load_masks(query, plan)
+        schemas = tuple(
+            join_lib.Schema(
+                qnodes=s.qnodes, qlabels=(s.root_label,) + s.child_labels
+            )
+            for s in plan.specs
+        )
+        # blocks are cut on the head table, so the join order must start
+        # there (disjointness across shards comes from head locality)
+        order = tuple(
+            join_lib.select_join_order(
+                list(schemas), stats.stwig_rows, start=plan.head
+            )
+        )
+        ring_radii = self.ring_radii_for(load) if use_ring else None
+        caps = tuple(int(c.shape[1]) for c in all_cols)
+        if len(schemas) > 1:
+            gfn = self._gather_step(len(schemas), plan.head, caps, ring_radii)
+            g_cols, g_valids = gfn(tuple(all_cols), tuple(all_valids), load_masks)
+        else:
+            g_cols, g_valids = (), ()
+        stats.join_order = [schemas[i].qnodes for i in order]
+        head_valid = all_valids[plan.head]
+        # one host copy of the head validity mask: blocks where no shard has
+        # a valid head row are provably empty and skipped without any device
+        # call (matching the local backend's empty-block behaviour)
+        head_any = np.asarray(jax.device_get(head_valid)).any(axis=0)
+        return _ShardedStreamState(
+            plan=plan,
+            stats=stats,
+            schemas=schemas,
+            order=order,
+            head_cols=all_cols[plan.head],
+            head_valid=head_valid,
+            head_valid_any=head_any,
+            gathered_cols=tuple(g_cols),
+            gathered_valids=tuple(g_valids),
+            explore_overflow=overflow,
+            cap=int(all_cols[plan.head].shape[1]),
         )
 
-        stats = MatchStats(backend="sharded", n_shards=S)
+    def _stream_block(
+        self, state: "_ShardedStreamState", lo: int, block_rows: int
+    ) -> tuple[np.ndarray, bool]:
+        """One pipelined block: join head rows ``[lo, lo+block_rows)`` of
+        every shard against the cached fetched tables and union the
+        (disjoint) per-shard results host-side."""
+        if not state.head_valid_any[lo : lo + block_rows].any():
+            return np.zeros((0, state.plan.n_qnodes), np.int64), False
+        jfn = self._join_block_step(
+            state.schemas,
+            state.order,
+            state.plan.join_rows_cap,
+            state.plan.join_dup_cap,
+            state.cap,
+            tuple(int(c.shape[1]) for c in state.gathered_cols),
+            block_rows,
+        )
+        self.join_block_calls += 1
+        cols, valid, n_rows, ovf = jfn(
+            state.head_cols,
+            state.head_valid,
+            state.gathered_cols,
+            state.gathered_valids,
+            jnp.int32(lo),
+        )
+        rows = self._union_rows(
+            cols, valid, state.schemas, state.order, max_matches=0
+        )
+        return rows, bool(jnp.any(ovf))
+
+    # ------------------------------------------------------ execution phases
+    def _explore(self, plan: QueryPlan, stats: MatchStats):
+        """STwig exploration (Algorithm 2 order) on every shard at once.
+
+        Returns stacked per-shard tables: ``all_cols[i]`` has shape
+        (S, rounds_i * rows_cap_i, width_i) with the shard axis leading.
+        """
+        bind = jax.device_put(
+            Bindings.fresh(plan.n_qnodes, self.pg.n_total + 1).words, self._rep
+        )
         overflow = False
         all_cols, all_valids = [], []
         for spec in plan.specs:
@@ -301,6 +529,7 @@ class DistributedMatcher:
             round_cols, round_valids = [], []
             contrib = None
             n_rows_tot = 0
+            n_roots_max = 0
             r = 0
             while True:
                 cols, valid, n_rows, cw, n_roots_max, ovf = fn(
@@ -323,14 +552,51 @@ class DistributedMatcher:
             all_cols.append(jnp.concatenate(round_cols, axis=1))
             all_valids.append(jnp.concatenate(round_valids, axis=1))
             stats.stwig_rows.append(n_rows_tot)
+            # parity with the local backend's stats (max over shards: the
+            # round count is driven by the most loaded shard)
+            stats.stwig_roots.append(int(n_roots_max))
             stats.rounds.append(r)
+        return all_cols, all_valids, overflow
 
-        # ---- load sets (Theorem 4) ----------------------------------------
+    def _load_masks(self, query: QueryGraph, plan: QueryPlan):
+        """Load sets (Theorem 4), host + device-sharded ``(S, T, S)`` form."""
         load = self.cgi.load_sets(query.label_pairs(), plan.head_dists)
         # reorder to (S, T, S): shard-major for sharding along the mesh axis
-        load_masks = jax.device_put(
+        masks = jax.device_put(
             np.transpose(load, (1, 0, 2)), NamedSharding(self.mesh, P(AXIS))
         )
+        return load, masks
+
+    def _union_rows(self, cols, valid, schemas, order, max_matches: int) -> np.ndarray:
+        """Disjoint per-shard union → host rows of ORIGINAL ids in query-node
+        column order (the sharded counterpart of `SubgraphMatcher._materialize`)."""
+        cols_h = np.asarray(jax.device_get(cols)).reshape(-1, cols.shape[-1])
+        valid_h = np.asarray(jax.device_get(valid)).reshape(-1)
+        rows_new = cols_h[valid_h]
+        if max_matches and rows_new.shape[0] > max_matches:
+            rows_new = rows_new[:max_matches]
+        final_qnodes = _final_schema(schemas, order)
+        perm = np.argsort(np.asarray(final_qnodes))
+        rows_new = rows_new[:, perm]
+        rows_old = np.where(
+            rows_new < self.pg.n_total,
+            self.pg.new_to_old[np.minimum(rows_new, self.pg.n_total - 1)],
+            -1,
+        )
+        return rows_old.astype(np.int64)
+
+    def _match_once(
+        self,
+        query: QueryGraph,
+        plan: QueryPlan | None = None,
+        use_ring: bool = False,
+        **kw,
+    ) -> MatchResult:
+        t0 = time.perf_counter()
+        plan = plan or self.plan(query, **kw)
+        stats = MatchStats(backend="sharded", n_shards=self.pg.n_shards)
+        all_cols, all_valids, overflow = self._explore(plan, stats)
+        load, load_masks = self._load_masks(query, plan)
 
         schemas = tuple(
             join_lib.Schema(
@@ -358,29 +624,41 @@ class DistributedMatcher:
         overflow |= bool(jnp.any(ovf))
 
         # ---- union across shards (already disjoint) ------------------------
-        cols_h = np.asarray(jax.device_get(cols)).reshape(-1, cols.shape[-1])
-        valid_h = np.asarray(jax.device_get(valid)).reshape(-1)
-        rows_new = cols_h[valid_h]
-        if plan.max_matches and rows_new.shape[0] > plan.max_matches:
-            rows_new = rows_new[: plan.max_matches]
-        final_qnodes = _final_schema(schemas, order)
-        perm = np.argsort(np.asarray(final_qnodes))
-        rows_new = rows_new[:, perm]
-        rows_old = np.where(
-            rows_new < self.pg.n_total,
-            self.pg.new_to_old[np.minimum(rows_new, self.pg.n_total - 1)],
-            -1,
-        )
+        rows_old = self._union_rows(cols, valid, schemas, order, plan.max_matches)
         stats.time_s = time.perf_counter() - t0
         stats.join_order = [schemas[i].qnodes for i in order]
         stats.cache_hits = self.cache.hits
         stats.cache_misses = self.cache.misses
         return MatchResult(
-            rows=rows_old.astype(np.int64),
+            rows=rows_old,
             n_matches=int(rows_old.shape[0]),
             complete=not overflow,
             stats=stats,
         )
+
+
+@dataclasses.dataclass(eq=False)
+class _ShardedStreamState:
+    """Per-query stream state for the sharded backend.
+
+    Exploration and the load-set fetch ran once; ``head_cols``/``head_valid``
+    are the stacked (S, head_cap, w) local head tables and
+    ``gathered_cols``/``gathered_valids`` the per-shard fetched tables, all
+    kept on device. `DistributedMatcher._stream_block` joins head rows
+    ``[lo, lo+B)`` per call — the lazy half of the pipeline.
+    """
+
+    plan: QueryPlan
+    stats: MatchStats
+    schemas: tuple
+    order: tuple[int, ...]
+    head_cols: jnp.ndarray
+    head_valid: jnp.ndarray
+    head_valid_any: np.ndarray  # (cap,) host bool: any shard valid at row i
+    gathered_cols: tuple
+    gathered_valids: tuple
+    explore_overflow: bool
+    cap: int  # per-shard head-table row capacity (the block loop bound)
 
 
 def _final_schema(schemas, order) -> tuple[int, ...]:

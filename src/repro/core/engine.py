@@ -12,6 +12,7 @@ match/join steps in ``shard_map``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from typing import Iterator
@@ -32,6 +33,7 @@ from repro.core.match import (
 from repro.core.plan import QueryPlan, STwigSpec, make_plan
 from repro.core.query import QueryGraph
 from repro.core.result import MatchPage, MatchResult, MatchStats
+from repro.core.stream import stream_blocks
 from repro.graphstore.partition import PartitionedGraph
 
 __all__ = ["MatchResult", "MatchStats", "MatchPage", "SubgraphMatcher"]
@@ -54,14 +56,54 @@ def _concat_tables(tables: list[STwigTable]) -> join_lib.JoinTable:
     return join_lib.JoinTable(cols=cols, valid=valid, n_rows=n_rows, overflow=overflow)
 
 
-def grow_caps(caps: dict, retries: int) -> dict:
+def grow_caps(caps: dict) -> dict:
     """One step of adaptive capacity growth (paper §4.2: block sizes are set
-    by available memory; overflow doubles them and re-runs)."""
+    by available memory; overflow doubles them and re-runs).
+
+    Growth is plain doubling for every capacity, so retry ``r`` runs at
+    ``2**r`` times the seed caps — geometric, bounded by ``max_retries``.
+    (An earlier version multiplied ``child_cap`` by ``2 * retries``,
+    compounding super-exponentially and risking OOM before the retry
+    budget was spent.)
+    """
     caps = dict(caps)
-    caps["child_cap"] = 2 * caps.get("child_cap", 8) * retries
-    caps["join_rows_cap"] = 4 * caps.get("join_rows_cap", 1 << 16)
-    caps["join_dup_cap"] = 4 * caps.get("join_dup_cap", 64)
+    caps["child_cap"] = 2 * caps.get("child_cap", 8)
+    caps["join_rows_cap"] = 2 * caps.get("join_rows_cap", 1 << 16)
+    caps["join_dup_cap"] = 2 * caps.get("join_dup_cap", 64)
     return caps
+
+
+def caps_from_plan(plan: QueryPlan, base: dict | None = None) -> dict:
+    """Recover the grow-able capacities from an already-made plan.
+
+    Used as the escalation seed when a caller passed an explicit ``plan``:
+    adaptive retries then double the plan's actual capacities instead of
+    silently restarting from the `make_plan` defaults (or, worse, not
+    retrying at all)."""
+    caps = dict(base or {})
+    caps.setdefault(
+        "child_cap", max((s.child_cap for s in plan.specs), default=8)
+    )
+    caps.setdefault("join_rows_cap", plan.join_rows_cap)
+    caps.setdefault("join_dup_cap", plan.join_dup_cap)
+    caps.setdefault("max_matches", plan.max_matches)
+    return caps
+
+
+@dataclasses.dataclass(eq=False)
+class _LocalStreamState:
+    """Per-query stream state for the local backend: exploration ran once,
+    tables/schemas/order are fixed, and blocks of the first table in join
+    order are joined lazily by `SubgraphMatcher._stream_block`."""
+
+    plan: QueryPlan
+    stats: MatchStats
+    tables: list
+    schemas: list
+    order: tuple[int, ...]
+    explore_overflow: bool
+    cap: int  # row capacity of the blocked table (the block loop bound)
+    valid_host: np.ndarray  # (cap,) host bool mask of the blocked table
 
 
 class SubgraphMatcher:
@@ -77,6 +119,9 @@ class SubgraphMatcher:
         assert 0 <= shard < pg.n_shards
         self.pg = pg
         self.cache = cache if cache is not None else ExecutableCache()
+        # cumulative device invocations of the per-block join chain (the
+        # streaming path); lets callers assert early-stopped streams skip work
+        self.join_block_calls = 0
         self.g = ShardGraph(
             labels=jnp.asarray(pg.labels[shard]),
             indptr=jnp.asarray(pg.indptr[shard]),
@@ -125,15 +170,18 @@ class SubgraphMatcher:
     ) -> MatchResult:
         """Match with adaptive capacity growth: if any block capacity
         overflows (paper §4.2: block sizes are set by available memory), the
-        plan is re-made with doubled capacities and the query re-runs. With
+        plan is re-made with doubled capacities and the query re-runs. When
+        an explicit ``plan`` is given, escalation starts from that plan's
+        caps (like `CompiledQuery.run`) instead of being disabled. With
         ``adaptive=False`` the first (possibly partial) result is returned
         with ``complete=False`` — the paper's first-K pipelined semantics."""
         res = self._match_once(query, plan, **kw)
         retries = 0
-        while adaptive and plan is None and not res.complete and retries < max_retries:
+        caps = caps_from_plan(plan, kw) if plan is not None else dict(kw)
+        while adaptive and not res.complete and retries < max_retries:
             retries += 1
-            kw = grow_caps(kw, retries)
-            res = self._match_once(query, None, **kw)
+            caps = grow_caps(caps)
+            res = self._match_once(query, None, **caps)
         res.stats.retries = retries
         return res
 
@@ -145,55 +193,58 @@ class SubgraphMatcher:
         block_rows: int = 1024,
         **kw,
     ) -> Iterator[MatchPage]:
-        """Pipelined first-K execution (paper §6.1): after exploration, the
-        first table in join order is fed through the join chain in blocks of
-        ``block_rows`` rows and each block's matches are yielded as soon as
-        they materialize. A consumer that stops after K matches never pays
-        for the joins of the remaining blocks — unlike `match`, which joins
-        everything and truncates afterwards.
+        """Pipelined first-K execution (paper §6.1) — thin wrapper over the
+        shared streaming driver (`repro.core.stream.stream_blocks`), kept
+        for direct (deprecated) engine use. See the driver for the block
+        semantics; both the local and sharded engines stream through it."""
+        yield from stream_blocks(self, query, plan, block_rows=block_rows, **kw)
 
-        Blocks partition the first table's rows, and every output row of a
-        join descends from exactly one build-side row, so pages are disjoint
-        and their union over all blocks equals the one-shot join. Streaming
-        is inherently first-K: there is no adaptive retry, and a page whose
-        block overflowed a capacity reports ``complete=False``.
-        """
+    # -------------------------------------------------- streaming interface
+    def _stream_setup(
+        self, query: QueryGraph, plan: QueryPlan | None = None, **kw
+    ) -> "_LocalStreamState":
+        """Run exploration once and pick the blocked (first-in-join-order)
+        table; everything the per-block join step needs is returned as one
+        reusable state object."""
         plan = plan or self.plan(query, **kw)
         stats = MatchStats(backend="local")
         tables, schemas, explore_overflow = self._explore(plan, stats)
-        order = join_lib.select_join_order(schemas, stats.stwig_rows)
-
+        order = tuple(join_lib.select_join_order(schemas, stats.stwig_rows))
         first = tables[order[0]]
-        cap = int(first.cols.shape[0])
-        B = max(1, min(block_rows, cap))
-        page_idx = 0
-        for lo in range(0, cap, B):
-            hi = min(cap, lo + B)
-            blk_valid = first.valid[lo:hi]
-            n_blk = int(jax.device_get(jnp.sum(blk_valid, dtype=jnp.int32)))
-            if n_blk == 0:
-                continue
-            acc = join_lib.JoinTable(
-                cols=first.cols[lo:hi],
-                valid=blk_valid,
-                n_rows=jnp.int32(n_blk),
-                overflow=jnp.bool_(False),
+        return _LocalStreamState(
+            plan=plan,
+            stats=stats,
+            tables=tables,
+            schemas=schemas,
+            order=order,
+            explore_overflow=explore_overflow,
+            cap=int(first.cols.shape[0]),
+            # one host copy of the blocked table's validity: empty blocks are
+            # then skipped without any per-block device round-trip
+            valid_host=np.asarray(jax.device_get(first.valid)),
+        )
+
+    def _stream_block(
+        self, state: "_LocalStreamState", lo: int, block_rows: int
+    ) -> tuple[np.ndarray, bool]:
+        """Join rows ``[lo, lo+block_rows)`` of the blocked table through the
+        join chain and materialize the block's matches."""
+        if not state.valid_host[lo : lo + block_rows].any():
+            return np.zeros((0, state.plan.n_qnodes), np.int64), False
+        first = state.tables[state.order[0]]
+        blk = join_lib.block_table(first, lo, block_rows)
+        self.join_block_calls += 1
+        acc, acc_schema = blk, state.schemas[state.order[0]]
+        for idx in state.order[1:]:
+            fn, merged = self._join_fn(
+                acc_schema,
+                state.schemas[idx],
+                state.plan.join_rows_cap,
+                state.plan.join_dup_cap,
             )
-            acc_schema = schemas[order[0]]
-            for idx in order[1:]:
-                fn, merged = self._join_fn(
-                    acc_schema, schemas[idx], plan.join_rows_cap, plan.join_dup_cap
-                )
-                acc, acc_schema = fn(acc, tables[idx]), merged
-            rows = self._materialize(acc, acc_schema, max_matches=0)
-            if rows.shape[0] == 0:
-                continue
-            yield MatchPage(
-                rows=rows,
-                index=page_idx,
-                complete=not (explore_overflow or bool(jax.device_get(acc.overflow))),
-            )
-            page_idx += 1
+            acc, acc_schema = fn(acc, state.tables[idx]), merged
+        rows = self._materialize(acc, acc_schema, max_matches=0)
+        return rows, bool(jax.device_get(acc.overflow))
 
     # ------------------------------------------------------ execution phases
     def _explore(

@@ -154,6 +154,30 @@ def sort_merge_join(
     )
 
 
+def block_table(table: JoinTable, lo, block_rows: int) -> JoinTable:
+    """Rows ``[lo, lo+block_rows)`` of a join table as a fixed-shape block.
+
+    ``lo`` may be a traced scalar: rows are read through a clamped gather so
+    one trace serves every block of a given size, and indices past the
+    table's capacity are masked invalid (the clamp would otherwise re-read
+    the last row and duplicate matches). This is the build side of the
+    paper's block-based pipelined join (§4.2 step 3 / §6.1): blocks
+    partition the table's valid rows, and every join output row descends
+    from exactly one build-side row, so per-block results are disjoint and
+    their union equals the unblocked join.
+    """
+    cap = int(table.cols.shape[0])
+    idx = jnp.asarray(lo, jnp.int32) + jnp.arange(block_rows, dtype=jnp.int32)
+    safe = jnp.minimum(idx, cap - 1)
+    valid = table.valid[safe] & (idx < cap)
+    return JoinTable(
+        cols=table.cols[safe],
+        valid=valid,
+        n_rows=jnp.sum(valid, dtype=jnp.int32),
+        overflow=jnp.bool_(False),
+    )
+
+
 def select_join_order(
     schemas: list[Schema], counts: list[int], start: int | None = None
 ) -> list[int]:

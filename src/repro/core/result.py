@@ -25,6 +25,8 @@ class MatchStats:
     retries: int = 0                   # adaptive capacity-growth re-runs
     rounds: list[int] = dataclasses.field(default_factory=list)
     stwig_rows: list[int] = dataclasses.field(default_factory=list)
+    # matching roots per STwig; both backends populate it (sharded reports
+    # the max over shards — the shard that drives the round count)
     stwig_roots: list[int] = dataclasses.field(default_factory=list)
     join_order: list[tuple[int, ...]] = dataclasses.field(default_factory=list)
     n_join_rows: int = 0
@@ -58,3 +60,7 @@ class MatchPage:
     rows: np.ndarray          # (n_rows, n_qnodes) ORIGINAL node ids
     index: int                # 0-based page number
     complete: bool            # False if this page's block overflowed a cap
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.rows.shape[0])

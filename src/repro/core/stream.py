@@ -1,0 +1,62 @@
+"""The shared streaming driver for BOTH backends (paper §6.1).
+
+An engine exposes two methods: ``_stream_setup`` runs the once-per-query
+work (exploration; on the sharded backend also the load-set-bounded fetch of
+remote STwig tables) and returns a state object, and
+``_stream_block(state, lo, B)`` joins only rows ``[lo, lo+B)`` of the
+blocked table — per-pair jitted joins locally, one block-parameterized
+shard_map call on the sharded backend. This single loop replaces the two
+divergent ``match_stream`` implementations; abandoning the iterator early
+leaves all remaining blocks' joins unexecuted on either backend.
+(`repro.api.compiled` re-exports the driver and layers paging/limits on top.)
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.plan import QueryPlan
+from repro.core.query import QueryGraph
+from repro.core.result import MatchPage
+
+
+def stream_blocks(
+    engine,
+    query: QueryGraph,
+    plan: QueryPlan | None = None,
+    *,
+    block_rows: int = 1024,
+    **engine_kw,
+) -> Iterator[MatchPage]:
+    """Yield one `MatchPage` per non-empty block of the blocked table.
+
+    Pages are disjoint and their union over all blocks equals a one-shot
+    ``max_matches=0`` run: blocks partition the blocked table's rows and
+    every join output row descends from exactly one of them (on the sharded
+    backend the blocked table is the head STwig, which is never fetched
+    remotely — Theorem 5 — so per-shard results stay disjoint too).
+    Streaming is inherently first-K: there is no adaptive retry; a page
+    whose block overflowed a capacity reports ``complete=False``.
+    """
+    state = engine._stream_setup(query, plan, **engine_kw)
+    B = max(1, min(block_rows, state.cap))
+    index = 0
+    for lo in range(0, state.cap, B):
+        rows, block_overflow = engine._stream_block(state, lo, B)
+        if rows.shape[0] == 0 and not block_overflow:
+            continue
+        yield MatchPage(
+            rows=rows,
+            index=index,
+            complete=not (state.explore_overflow or block_overflow),
+        )
+        index += 1
+    if index == 0 and state.explore_overflow:
+        # exploration overflowed and no block produced rows: without a page
+        # the incompleteness would be invisible to the consumer
+        yield MatchPage(
+            rows=np.zeros((0, state.plan.n_qnodes), np.int64),
+            index=0,
+            complete=False,
+        )

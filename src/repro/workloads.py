@@ -38,6 +38,24 @@ def dfs_query(g: Graph, rng: np.random.Generator, n_nodes: int) -> QueryGraph | 
     )
 
 
+def path_query(g: Graph, rng: np.random.Generator, n_nodes: int) -> QueryGraph | None:
+    """A simple-path query sampled from the data graph (always matchable,
+    like `dfs_query`, but guaranteed path topology). Paths of ≥4 nodes
+    decompose into ≥2 STwigs, so they exercise the join phase — `dfs_query`
+    often lands on a star, which a single STwig covers."""
+    v = int(rng.integers(g.n_nodes))
+    nodes = [v]
+    while len(nodes) < n_nodes:
+        nbrs = [int(u) for u in g.neighbors(nodes[-1]) if int(u) not in nodes]
+        if not nbrs:
+            return None
+        nodes.append(nbrs[int(rng.integers(len(nbrs)))])
+    return QueryGraph.build(
+        [int(g.labels[v]) for v in nodes],
+        [(i, i + 1) for i in range(n_nodes - 1)],
+    )
+
+
 def random_query(
     n_nodes: int, n_edges: int, n_labels: int, rng: np.random.Generator
 ) -> QueryGraph:

@@ -6,7 +6,11 @@ import networkx as nx
 
 from repro.core import QueryGraph
 from repro.graphstore.csr import Graph
-from repro.workloads import dfs_query, random_query  # noqa: F401  (re-export)
+from repro.workloads import (  # noqa: F401  (re-export)
+    dfs_query,
+    path_query,
+    random_query,
+)
 
 
 def nx_oracle(g: Graph, q: QueryGraph) -> set[tuple[int, ...]]:

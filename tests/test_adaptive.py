@@ -1,0 +1,91 @@
+"""Adaptive capacity growth (paper §4.2): plain-doubling escalation and
+retry behaviour when the caller supplies an explicit plan."""
+import numpy as np
+import pytest
+
+from repro.api import GraphSession
+from repro.core import QueryGraph
+from repro.core.engine import SubgraphMatcher, caps_from_plan, grow_caps
+from repro.graphstore import PartitionedGraph, generators
+
+from helpers import dfs_query, nx_oracle
+
+
+def test_grow_caps_is_plain_doubling():
+    """Pin the escalation sequence: every cap doubles per retry (2**r × the
+    seed), never the old super-exponential ``2 * cap * retries`` blow-up."""
+    caps = {"child_cap": 8, "join_rows_cap": 1 << 16, "join_dup_cap": 64}
+    seq = []
+    for _ in range(4):
+        caps = grow_caps(caps)
+        seq.append(
+            (caps["child_cap"], caps["join_rows_cap"], caps["join_dup_cap"])
+        )
+    assert seq == [
+        (16, 1 << 17, 128),
+        (32, 1 << 18, 256),
+        (64, 1 << 19, 512),
+        (128, 1 << 20, 1024),
+    ]
+
+
+def test_grow_caps_defaults_and_passthrough():
+    grown = grow_caps({})
+    assert grown == {
+        "child_cap": 16,
+        "join_rows_cap": 1 << 17,
+        "join_dup_cap": 128,
+    }
+    # unrelated keys survive untouched
+    grown = grow_caps({"max_matches": 7, "child_cap": 2})
+    assert grown["max_matches"] == 7 and grown["child_cap"] == 4
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    g = generators.rmat(150, 500, 4, seed=7, symmetrize=True)
+    rng = np.random.default_rng(0)
+    q = None
+    while q is None:
+        q = dfs_query(g, rng, 4)
+    return g, q
+
+
+def test_caps_from_plan_recovers_plan_capacities(small_world):
+    g, q = small_world
+    pg = PartitionedGraph.build(g, 1)
+    m = SubgraphMatcher(pg)
+    plan = m.plan(q, child_cap=5, join_rows_cap=4096, join_dup_cap=32)
+    caps = caps_from_plan(plan)
+    assert caps["child_cap"] == 5
+    assert caps["join_rows_cap"] == 4096
+    assert caps["join_dup_cap"] == 32
+    assert caps["max_matches"] == plan.max_matches
+    # explicit base kwargs win over plan-derived values
+    caps = caps_from_plan(plan, {"child_cap": 11})
+    assert caps["child_cap"] == 11
+
+
+def test_match_escalates_from_explicit_plan(small_world):
+    """`SubgraphMatcher.match` used to silently disable adaptive retry when
+    a plan was passed; now it escalates from the given plan's caps."""
+    g, q = small_world
+    pg = PartitionedGraph.build(g, 1)
+    m = SubgraphMatcher(pg)
+    plan = m.plan(q, child_cap=2, max_matches=0)  # forces an overflow
+    res = m.match(q, plan)
+    assert res.stats.retries >= 1
+    assert res.complete
+    assert set(map(tuple, res.rows.tolist())) == nx_oracle(g, q)
+
+
+def test_compiled_run_and_engine_match_agree_on_escalation(small_world):
+    g, q = small_world
+    s = GraphSession.open(g)
+    facade = s.compile(q, max_matches=0, child_cap=2).run(adaptive=True)
+    m = SubgraphMatcher(PartitionedGraph.build(g, 1))
+    direct = m.match(q, m.plan(q, child_cap=2, max_matches=0))
+    assert facade.complete and direct.complete
+    assert set(map(tuple, facade.rows.tolist())) == set(
+        map(tuple, direct.rows.tolist())
+    )
