@@ -13,6 +13,7 @@ prints ``name,us_per_call,derived`` CSV rows.
  Fig 10(c) (graph density)            bench_density
  Fig 10(d) (label density)            bench_label_density
  §Roofline (this brief)               bench_roofline
+ Kernel backends (DESIGN.md §3)       bench_kernels
 """
 from __future__ import annotations
 
@@ -32,6 +33,7 @@ def main() -> None:
         bench_density,
         bench_graph_size,
         bench_index,
+        bench_kernels,
         bench_label_density,
         bench_loading,
         bench_loadset,
@@ -54,6 +56,7 @@ def main() -> None:
         "label_density": bench_label_density.main,
         "loadset": bench_loadset.main,
         "roofline": bench_roofline.main,
+        "kernels": bench_kernels.main,
     }
     def _gc():
         # each query spec jit-compiles a fresh executable; without clearing,

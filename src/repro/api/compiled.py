@@ -34,6 +34,13 @@ class CompiledQuery:
     plan: QueryPlan
     caps: dict
 
+    @property
+    def kernels(self) -> str:
+        """Name of the kernel backend this query's executables are built
+        against (it keys the session's executable cache, so flipping the
+        session's kernels re-resolves here automatically)."""
+        return self.session.engine.kernels.name
+
     def run(
         self,
         *,

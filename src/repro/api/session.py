@@ -12,6 +12,7 @@ from typing import Iterable, Sequence
 import numpy as np
 
 from repro.api.compiled import CompiledQuery
+from repro.core.backend import Kernels, resolve_kernels
 from repro.core.cache import ExecutableCache
 from repro.core.engine import SubgraphMatcher
 from repro.core.plan import QueryPlan
@@ -41,6 +42,7 @@ class GraphSession:
         graph_or_pg: Graph | PartitionedGraph,
         *,
         backend: str = "auto",
+        kernels: "str | Kernels" = "auto",
         n_shards: int | None = None,
         mesh=None,
         partition_mode: str = "hash",
@@ -52,9 +54,17 @@ class GraphSession:
         partition has multiple shards (and enough devices exist), else
         "local". A raw `Graph` is partitioned here: into 1 shard for the
         local backend, ``n_shards`` (default: all devices) for sharded.
+
+        ``kernels`` selects the kernel backend every dense inner step draws
+        from — ``"auto"`` (Pallas on TPU, jnp elsewhere), ``"jnp"``,
+        ``"pallas"``, ``"pallas-interpret"``, or a registered `Kernels`
+        instance (`repro.core.backend`). The choice keys every cached
+        executable, so sessions can be compared across kernel backends
+        without recompiling each other's programs away.
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        kern = resolve_kernels(kernels)
         import jax
 
         n_dev = len(jax.devices())
@@ -91,7 +101,7 @@ class GraphSession:
                     f"local backend needs a 1-shard partition, got {pg.n_shards} "
                     "shards (use backend='sharded' or re-partition)"
                 )
-            engine = SubgraphMatcher(pg, cache=cache)
+            engine = SubgraphMatcher(pg, cache=cache, kernels=kern)
         else:
             from jax.sharding import Mesh
 
@@ -103,7 +113,7 @@ class GraphSession:
                         f"sharded backend needs ≥{pg.n_shards} devices, have {n_dev}"
                     )
                 mesh = Mesh(np.array(jax.devices()[: pg.n_shards]), ("data",))
-            engine = DistributedMatcher(pg, mesh, cache=cache)
+            engine = DistributedMatcher(pg, mesh, cache=cache, kernels=kern)
         return cls(pg, engine, backend, cache)
 
     # ----------------------------------------------------------- query API
@@ -164,6 +174,18 @@ class GraphSession:
         facade methods)."""
         return self._engine
 
+    @property
+    def kernels(self) -> Kernels:
+        """The kernel backend the engine's dense steps draw from."""
+        return self._engine.kernels
+
+    def set_kernels(self, kernels: "str | Kernels") -> "GraphSession":
+        """Switch the kernel backend for subsequent runs. Safe mid-session:
+        executables are keyed by (static spec, kernels name), so previously
+        compiled programs survive and a later switch back reuses them."""
+        self._engine.kernels = resolve_kernels(kernels)
+        return self
+
     def replan(self, query: QueryGraph, **caps) -> QueryPlan:
         return self._engine.plan(query, **caps)
 
@@ -178,6 +200,7 @@ class GraphSession:
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (
-            f"GraphSession(backend={self.backend!r}, n_shards={self.pg.n_shards}, "
+            f"GraphSession(backend={self.backend!r}, "
+            f"kernels={self.kernels.name!r}, n_shards={self.pg.n_shards}, "
             f"cache={len(self.cache)} executables)"
         )

@@ -6,6 +6,7 @@ Public API:
     make_plan / QueryPlan        — static capacity planning
     MatchResult / MatchStats     — typed results (repro.core.result)
     ExecutableCache              — session-owned jit cache (repro.core.cache)
+    Kernels / get_kernels        — kernel backend registry (repro.core.backend)
     SubgraphMatcher              — single-shard engine (prefer repro.api)
     DistributedMatcher           — shard_map engine w/ head-STwig + load sets
 
@@ -20,6 +21,13 @@ from repro.core.decompose import (
     stwig_order_selection,
 )
 from repro.core.plan import QueryPlan, STwigSpec, make_plan
+from repro.core.backend import (
+    Kernels,
+    available_backends,
+    get_kernels,
+    register_backend,
+    resolve_kernels,
+)
 from repro.core.cache import ExecutableCache
 from repro.core.result import MatchPage, MatchResult, MatchStats
 from repro.core.engine import SubgraphMatcher
@@ -34,6 +42,11 @@ __all__ = [
     "QueryPlan",
     "STwigSpec",
     "make_plan",
+    "Kernels",
+    "available_backends",
+    "get_kernels",
+    "register_backend",
+    "resolve_kernels",
     "ExecutableCache",
     "MatchResult",
     "MatchStats",

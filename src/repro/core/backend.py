@@ -1,0 +1,235 @@
+"""The kernel backend layer: one swappable op set under every engine.
+
+Every dense inner step of the matcher — bitset pack/unpack/lookup/build,
+the fused STwig expansion (candidate filter + per-root compaction), the
+standalone candidate filter, and the sort-merge hash-join probe — is an op
+on a `Kernels` object. Both engines (`repro.core.engine`,
+`repro.core.dist`) call through whatever `Kernels` they were opened with,
+and the choice participates in every `ExecutableCache` key, so one session
+can compare backends without cache poisoning (DESIGN.md §3).
+
+Registered backends:
+
+  * ``"jnp"``              — pure-jnp reference ops (the portable path and
+                             the oracle for everything else);
+  * ``"pallas"``           — Pallas TPU kernels (`repro.kernels.bitset`,
+                             `repro.kernels.stwig_expand`,
+                             `repro.kernels.hash_join`);
+  * ``"pallas-interpret"`` — the same kernels in interpret mode: runs on
+                             CPU, used by the parity tests in CI;
+  * ``"auto"``             — resolves to ``"pallas"`` on TPU, ``"jnp"``
+                             elsewhere.
+
+Making any step faster now means writing one kernel and registering it —
+not re-plumbing two engines: subclass `Kernels` (override only the ops you
+accelerate) and `register_backend` it.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitset import ref as _bitset_ref
+from repro.kernels.hash_join import ref as _join_ref
+from repro.kernels.stwig_expand import ref as _expand_ref
+
+WORD_BITS = _bitset_ref.WORD_BITS
+n_words = _bitset_ref.n_words
+
+
+class Kernels:
+    """The op interface engines program against. The base class IS the jnp
+    reference implementation; accelerated backends override per op.
+
+    All ops are shape-polymorphic pure functions safe under ``jit``,
+    ``vmap`` and ``shard_map``; static configuration (labels, capacities)
+    is keyword-only so engines can close over it at trace time.
+    """
+
+    name = "jnp"
+
+    # ---------------------------------------------------- packed bitsets
+    def bitset_pack(self, mask: jnp.ndarray) -> jnp.ndarray:
+        """(n,) bool (n % 32 == 0) → (n/32,) uint32 packed words."""
+        return _bitset_ref.pack_reference(mask)
+
+    def bitset_unpack(self, words: jnp.ndarray) -> jnp.ndarray:
+        """(W,) uint32 → (W*32,) bool."""
+        return _bitset_ref.unpack_reference(words)
+
+    def bitset_lookup(self, words: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+        """Membership test; negative / out-of-range ids are ``False``."""
+        return _bitset_ref.lookup_reference(words, ids)
+
+    def bitset_build(
+        self, ids: jnp.ndarray, valid: jnp.ndarray, nwords: int
+    ) -> jnp.ndarray:
+        """Packed bitset from (possibly duplicated) masked ids."""
+        return _bitset_ref.build_reference(ids, valid, nwords)
+
+    # ------------------------------------------------------- exploration
+    def candidate_filter(
+        self, words, dst_ids, dst_labels, root_ok, child_label: int
+    ) -> jnp.ndarray:
+        """Fused MatchSTwig step-2 filter for ONE child label."""
+        return _bitset_ref.candidate_filter_reference(
+            words, dst_ids, dst_labels, root_ok, child_label
+        )
+
+    def stwig_expand(
+        self,
+        words_k,
+        dst_ids,
+        dst_labels,
+        edge_src,
+        seg_start,
+        root_ok,
+        *,
+        child_labels: tuple[int, ...],
+        child_bound: tuple[bool, ...],
+        child_cap: int,
+        cap: int,
+        n_total: int,
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Fused steps 2-3: per-child filter + per-root compaction into
+        candidate lists ``(k, cap+1, C)`` with exact counts ``(k, cap)``."""
+        return _expand_ref.stwig_expand_reference(
+            words_k,
+            dst_ids,
+            dst_labels,
+            edge_src,
+            seg_start,
+            root_ok,
+            child_labels=child_labels,
+            child_bound=child_bound,
+            child_cap=child_cap,
+            cap=cap,
+            n_total=n_total,
+        )
+
+    # -------------------------------------------------------------- join
+    def hash_join_probe(
+        self, ka_sorted, a_keys, a_valid, kb, b_keys, b_valid, *, dup_cap: int
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Sorted windowed probe with exact-key verification: ``hit`` and
+        sorted-side row indices, both ``(capB, dup_cap)``."""
+        return _join_ref.probe_reference(
+            ka_sorted, a_keys, a_valid, kb, b_keys, b_valid, dup_cap=dup_cap
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<Kernels {self.name!r}>"
+
+
+class PallasKernels(Kernels):
+    """The Pallas TPU kernel set. ``interpret=True`` runs the same kernels
+    through the Pallas interpreter (works on CPU — that is what CI's parity
+    tests use); ``interpret=False`` compiles them with Mosaic on TPU."""
+
+    def __init__(self, *, interpret: bool = False):
+        self.interpret = interpret
+        self.name = "pallas-interpret" if interpret else "pallas"
+
+    def bitset_pack(self, mask):
+        from repro.kernels.bitset import bitset_pack
+
+        return bitset_pack(mask, interpret=self.interpret)
+
+    def bitset_unpack(self, words):
+        from repro.kernels.bitset import bitset_unpack
+
+        return bitset_unpack(words, interpret=self.interpret)
+
+    def bitset_lookup(self, words, ids):
+        from repro.kernels.bitset import bitset_lookup
+
+        return bitset_lookup(words, ids, interpret=self.interpret)
+
+    def bitset_build(self, ids, valid, nwords):
+        # scatter stays in XLA (no scatter-OR on TPU vector units); the
+        # 32-lane pack runs in-kernel
+        from repro.kernels.bitset import bitset_pack
+
+        n_bits = nwords * WORD_BITS
+        idx = jnp.where(valid, ids, n_bits)
+        bits = jnp.zeros((n_bits,), jnp.bool_).at[idx].set(True, mode="drop")
+        return bitset_pack(bits, interpret=self.interpret)
+
+    def candidate_filter(self, words, dst_ids, dst_labels, root_ok, child_label):
+        from repro.kernels.bitset import candidate_filter
+
+        return candidate_filter(
+            words,
+            dst_ids,
+            dst_labels,
+            root_ok,
+            child_label,
+            interpret=self.interpret,
+        )
+
+    def stwig_expand(self, *args, **kw):
+        # full submodule path: the package attribute of the same name is
+        # shadowed by the submodule if anyone imported it directly first
+        from repro.kernels.stwig_expand.stwig_expand import stwig_expand
+
+        return stwig_expand(*args, interpret=self.interpret, **kw)
+
+    def hash_join_probe(self, *args, **kw):
+        from repro.kernels.hash_join.hash_join import hash_join_probe
+
+        return hash_join_probe(*args, interpret=self.interpret, **kw)
+
+
+# ------------------------------------------------------------------ registry
+_REGISTRY: dict[str, Callable[[], Kernels]] = {}
+_INSTANCES: dict[str, Kernels] = {}
+
+KERNEL_BACKENDS = ("auto", "jnp", "pallas", "pallas-interpret")
+
+
+def register_backend(name: str, factory: Callable[[], Kernels]) -> None:
+    """Register a kernel backend under ``name`` (factory called lazily,
+    once). Third-party backends can register here and be selected by name
+    through `GraphSession.open(kernels=...)`."""
+    _REGISTRY[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_kernels(name: str) -> Kernels:
+    """The (singleton) `Kernels` registered under ``name``."""
+    try:
+        inst = _INSTANCES[name]
+    except KeyError:
+        try:
+            factory = _REGISTRY[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown kernel backend {name!r}; registered: "
+                f"{available_backends()}"
+            ) from None
+        inst = _INSTANCES[name] = factory()
+    return inst
+
+
+def resolve_kernels(spec: "str | Kernels | None" = None) -> Kernels:
+    """Normalize a user-facing kernels spec: a `Kernels` instance passes
+    through, ``None`` means ``"auto"``, and ``"auto"`` picks Pallas on TPU
+    and jnp elsewhere (interpret mode is never auto-selected — it is a
+    testing backend)."""
+    if isinstance(spec, Kernels):
+        return spec
+    name = spec or "auto"
+    if name == "auto":
+        name = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return get_kernels(name)
+
+
+register_backend("jnp", Kernels)
+register_backend("pallas", PallasKernels)
+register_backend("pallas-interpret", lambda: PallasKernels(interpret=True))

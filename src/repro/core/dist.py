@@ -32,6 +32,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import join as join_lib
+from repro.core.backend import Kernels, resolve_kernels
 from repro.core.cache import ExecutableCache
 from repro.core.collectives import fetch_load_set, or_allreduce
 from repro.core.engine import MatchResult, caps_from_plan, grow_caps
@@ -94,6 +95,7 @@ class DistributedMatcher:
     mesh: Mesh
     cgi: ClusterGraphIndex = None  # type: ignore[assignment]
     cache: ExecutableCache = None  # type: ignore[assignment]
+    kernels: "str | Kernels | None" = None
 
     def __post_init__(self):
         assert self.mesh.devices.size == self.pg.n_shards, (
@@ -104,6 +106,9 @@ class DistributedMatcher:
             self.cgi = ClusterGraphIndex.build(self.pg)
         if self.cache is None:
             self.cache = ExecutableCache()
+        # kernel backend for every per-shard dense step; reassignable —
+        # executables are keyed by (static spec, kernels.name)
+        self.kernels = resolve_kernels(self.kernels)
         self._g = _StackedGraph(self.pg, self.mesh)
         self._rep = NamedSharding(self.mesh, P())
         # cumulative device invocations of the block-parameterized join step
@@ -113,16 +118,18 @@ class DistributedMatcher:
     # ------------------------------------------------------- jitted steps
     def _match_step(self, spec: STwigSpec):
         return self.cache.get(
-            ("dist_match", spec), lambda: self._build_match_step(spec)
+            ("dist_match", spec, self.kernels.name),
+            lambda: self._build_match_step(spec),
         )
 
     def _build_match_step(self, spec: STwigSpec):
         gspecs = (P(AXIS),) * 6 + (P(),)
+        kern = self.kernels
 
         def body(tree, bind_words, round_idx):
             g = _local_shard_graph(tree)
             table, contrib = match_stwig_shard(
-                g, Bindings(bind_words), spec, round_idx
+                g, Bindings(bind_words), spec, round_idx, kernels=kern
             )
             contrib_w = or_allreduce(contrib.words, AXIS)
             n_roots_max = lax.pmax(table.n_roots, AXIS)
@@ -158,7 +165,17 @@ class DistributedMatcher:
         caps: tuple[int, ...],
         ring_radii: tuple[int, ...] | None = None,
     ):
-        key = ("dist_join", schemas, order, head_pos, out_cap, dup_cap, caps, ring_radii)
+        key = (
+            "dist_join",
+            schemas,
+            order,
+            head_pos,
+            out_cap,
+            dup_cap,
+            caps,
+            ring_radii,
+            self.kernels.name,
+        )
         return self.cache.get(
             key,
             lambda: self._build_join_step(
@@ -175,6 +192,7 @@ class DistributedMatcher:
         ppermute variant: bytes moved scale with the load-set radius instead
         of the cluster size (valid when the cluster graph is a ring — the
         engine checks applicability host-side)."""
+        kern = self.kernels
 
         def body(tables, valids, load_masks):
             # tables[i]: (1, cap_i, w_i); load_masks: (1, T, S)
@@ -209,6 +227,7 @@ class DistributedMatcher:
                     schemas[idx],
                     out_cap=out_cap,
                     dup_cap=dup_cap,
+                    kernels=kern,
                 )
             return acc.cols[None], acc.valid[None], acc.n_rows[None], acc.overflow[None]
 
@@ -218,6 +237,9 @@ class DistributedMatcher:
                 mesh=self.mesh,
                 in_specs=((P(AXIS),) * len(schemas), (P(AXIS),) * len(schemas), P(AXIS)),
                 out_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+                # Pallas calls inside the mapped body defeat the static
+                # replication check (same situation as the match step)
+                check_vma=False,
             )
         )
 
@@ -293,6 +315,7 @@ class DistributedMatcher:
             head_cap,
             gathered_caps,
             block_rows,
+            self.kernels.name,
         )
         return self.cache.get(
             key,
@@ -315,6 +338,7 @@ class DistributedMatcher:
         disjoint within a shard and across shards.
         """
         head_pos = order[0]
+        kern = self.kernels
         # position of each spec's table in the gathered (non-head) tuple
         g_index = {
             i: j
@@ -347,6 +371,7 @@ class DistributedMatcher:
                     schemas[idx],
                     out_cap=out_cap,
                     dup_cap=dup_cap,
+                    kernels=kern,
                 )
             return acc.cols[None], acc.valid[None], acc.n_rows[None], acc.overflow[None]
 
@@ -363,6 +388,9 @@ class DistributedMatcher:
                     P(),
                 ),
                 out_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+                # Pallas calls inside the mapped body defeat the static
+                # replication check (same situation as the match step)
+                check_vma=False,
             )
         )
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import join as join_lib
+from repro.core.backend import Kernels, resolve_kernels
 from repro.core.cache import ExecutableCache
 from repro.core.match import (
     Bindings,
@@ -115,10 +116,15 @@ class SubgraphMatcher:
         shard: int = 0,
         *,
         cache: ExecutableCache | None = None,
+        kernels: "str | Kernels | None" = None,
     ):
         assert 0 <= shard < pg.n_shards
         self.pg = pg
         self.cache = cache if cache is not None else ExecutableCache()
+        # the kernel backend every dense step draws from; reassignable at
+        # any time — executables are keyed by (static spec, kernels.name),
+        # so switching backends mid-session cannot poison the cache
+        self.kernels = resolve_kernels(kernels)
         # cumulative device invocations of the per-block join chain (the
         # streaming path); lets callers assert early-stopped streams skip work
         self.join_block_calls = 0
@@ -135,25 +141,37 @@ class SubgraphMatcher:
 
     # -------------------------------------------------- cached executables
     def _match_fn(self, spec: STwigSpec):
+        kern = self.kernels
         return self.cache.get(
-            ("match", spec),
-            lambda: jax.jit(functools.partial(match_stwig_shard, spec=spec)),
+            ("match", spec, kern.name),
+            lambda: jax.jit(
+                functools.partial(match_stwig_shard, spec=spec, kernels=kern)
+            ),
         )
 
     def _join_fn(self, schema_a, schema_b, out_cap: int, dup_cap: int):
         """Returns (jitted join fn, merged schema). The schema is static — it
         must not pass through jit."""
+        kern = self.kernels
 
         def build():
             merged, _ = schema_a.merge(schema_b)
             fn = jax.jit(
                 lambda a, b: join_lib.sort_merge_join(
-                    a, b, schema_a, schema_b, out_cap=out_cap, dup_cap=dup_cap
+                    a,
+                    b,
+                    schema_a,
+                    schema_b,
+                    out_cap=out_cap,
+                    dup_cap=dup_cap,
+                    kernels=kern,
                 )[0]
             )
             return fn, merged
 
-        return self.cache.get(("join", schema_a, schema_b, out_cap, dup_cap), build)
+        return self.cache.get(
+            ("join", schema_a, schema_b, out_cap, dup_cap, kern.name), build
+        )
 
     # ------------------------------------------------------------------ API
     def plan(self, query: QueryGraph, **kw) -> QueryPlan:

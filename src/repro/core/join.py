@@ -1,9 +1,11 @@
 """Join phase (paper §4.2 step 3): join-order selection + pipelined joins.
 
 Intermediate STwig tables are joined on their shared query nodes. We use a
-sort-merge join (TPU-friendly: one sort + searchsorted + windowed probe)
-with static capacities; `repro.kernels.hash_join` provides the Pallas probe
-kernel and this module is its oracle.
+sort-merge join (TPU-friendly: one sort + lower-bound + windowed probe)
+with static capacities. The probe — lower bound, window expansion, and
+exact-key verification — is a `Kernels` op (`repro.core.backend`):
+`repro.kernels.hash_join` is the Pallas implementation and
+`repro.kernels.hash_join.ref` the jnp reference this module defaults to.
 
 Two of the paper's optimizations appear here:
   * join order selection — greedy smallest-intermediate-first over runtime
@@ -23,6 +25,8 @@ import dataclasses
 from typing import NamedTuple
 
 import jax.numpy as jnp
+
+from repro.core.backend import Kernels, get_kernels
 
 
 class JoinTable(NamedTuple):
@@ -81,9 +85,13 @@ def sort_merge_join(
     *,
     out_cap: int,
     dup_cap: int,
+    kernels: Kernels | None = None,
 ) -> tuple[JoinTable, Schema]:
     """R_a ⋈ R_b on shared query nodes; output capacity ``out_cap``;
-    at most ``dup_cap`` equal-key rows on the build (a) side per probe."""
+    at most ``dup_cap`` equal-key rows on the build (a) side per probe.
+    ``kernels`` selects the probe backend (default: jnp reference) and must
+    be bound statically before ``jit``."""
+    kern = kernels if kernels is not None else get_kernels("jnp")
     merged_schema, shared = schema_a.merge(schema_b)
     assert shared, "join between disconnected tables"
     pos_a = tuple(schema_a.qnodes.index(q) for q in shared)
@@ -94,26 +102,26 @@ def sort_merge_join(
     key_b = _combine_keys(b.cols, pos_b)
     order = jnp.argsort(key_a)
     ka = key_a[order]
+    a_valid_s = a.valid[order]
 
     # build-side duplicate-run overflow detection
     run_start = jnp.concatenate(
         [jnp.ones((1,), bool), ka[1:] != ka[:-1]]
-    ) | ~a.valid[order]
+    ) | ~a_valid_s
     run_id = jnp.cumsum(run_start.astype(jnp.int32)) - 1
     run_len = jnp.zeros(ka.shape[0], jnp.int32).at[run_id].add(1)
-    dup_overflow = jnp.max(jnp.where(a.valid[order], run_len[run_id], 0)) > dup_cap
+    dup_overflow = jnp.max(jnp.where(a_valid_s, run_len[run_id], 0)) > dup_cap
 
-    lo = jnp.searchsorted(ka, key_b)  # (nb,)
+    # windowed probe with exact-key verification — one fused backend op
     W = dup_cap
-    probe = lo[:, None] + jnp.arange(W, dtype=lo.dtype)[None, :]  # (nb, W)
-    in_range = probe < ka.shape[0]
-    probe_c = jnp.minimum(probe, ka.shape[0] - 1)
-    hash_hit = in_range & (ka[probe_c] == key_b[:, None]) & b.valid[:, None]
+    key_pos_a = jnp.asarray(pos_a, jnp.int32)
+    key_pos_b = jnp.asarray(pos_b, jnp.int32)
+    a_keys_s = a.cols[order][:, key_pos_a]     # (na, nk) sorted key columns
+    b_keys = b.cols[:, key_pos_b]              # (nb, nk)
+    hit, probe_c = kern.hash_join_probe(
+        ka, a_keys_s, a_valid_s, key_b, b_keys, b.valid, dup_cap=W
+    )
     a_rows = order[probe_c]
-    hit = hash_hit & a.valid[a_rows]
-    # exact key verification (hash collisions)
-    for pa, pb in zip(pos_a, pos_b):
-        hit &= a.cols[a_rows, pa] == b.cols[:, pb][:, None]
 
     # merged row values: all of a's columns + b's extra columns
     extra_pos_b = tuple(

@@ -13,22 +13,19 @@ becomes one edge-parallel pass over the shard's CSR arrays:
   5. binding update   = scatter-OR into packed bitsets
 
 Everything is fixed-capacity (see plan.py); the function reports exact counts
-and overflow flags so the engine can run more rounds. ``repro.kernels.
-stwig_expand`` provides a Pallas TPU kernel for steps 2-4; this module is the
-pure-jnp implementation used as its oracle and as the portable path.
+and overflow flags so the engine can run more rounds. Every dense inner op —
+bitset membership, the fused step-2/3 filter + compaction
+(`repro.kernels.stwig_expand` on the Pallas backend), binding builds — goes
+through the `Kernels` backend passed in (`repro.core.backend`); the default
+``"jnp"`` backend is the reference oracle and the portable path.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.graphstore.labels import (
-    jnp_bitset_build,
-    jnp_bitset_test,
-    n_words,
-)
+from repro.core.backend import Kernels, get_kernels, n_words
 from repro.core.plan import STwigSpec
 
 
@@ -87,13 +84,17 @@ def match_stwig_shard(
     bind: Bindings,
     spec: STwigSpec,
     round_idx: jnp.ndarray,
+    kernels: Kernels | None = None,
 ) -> tuple[STwigTable, Bindings]:
     """Match one STwig on one shard (round ``round_idx`` of root chunks).
 
     Returns the local match table and *this shard's contribution* to the new
     bindings for the STwig's query nodes (caller OR-reduces across shards,
-    then replaces rows of ``bind``).
+    then replaces rows of ``bind``). ``kernels`` selects the backend for the
+    dense inner ops (default: the jnp reference set) and must be bound
+    statically (e.g. via ``functools.partial``) before ``jit``.
     """
+    kern = kernels if kernels is not None else get_kernels("jnp")
     cap, edge_cap = g.cap, g.edge_cap
     n_total = g.n_total
     k = spec.n_children
@@ -106,34 +107,37 @@ def match_stwig_shard(
     # ---- step 1: root candidate mask (node-parallel) ----------------------
     root_mask = (g.labels == spec.root_label) & (node_slot < g.n_local)
     if spec.root_bound:
-        root_mask &= jnp_bitset_test(bind.words[spec.root_qnode], gid)
+        root_mask &= kern.bitset_lookup(bind.words[spec.root_qnode], gid)
 
-    # ---- step 2: per-child candidate edges (edge-parallel) ----------------
+    # ---- steps 2-3: per-child candidate filter + per-root compaction ------
     e_pos = jnp.arange(edge_cap, dtype=jnp.int32)
     e_valid = e_pos < g.n_local_edges
     root_ok_e = e_valid & jnp.take(root_mask, g.edge_src, mode="clip") & (
         g.edge_src < cap
     )
     dst_labels = jnp.take(g.all_labels, g.indices, mode="clip")
-
-    cand = []   # per child: (cap+1, C) int32 candidate ids (ghost-padded)
-    cnt = []    # per child: (cap,) int32 exact candidate counts
     seg_start = jnp.take(g.indptr, jnp.minimum(g.edge_src, cap), mode="clip")
-    for i in range(k):
-        m = root_ok_e & (dst_labels == spec.child_labels[i])
-        if spec.child_bound[i]:
-            m &= jnp_bitset_test(bind.words[spec.child_qnodes[i]], g.indices)
-        ecs = _exclusive_cumsum(m)
-        pos = ecs - jnp.take(ecs, seg_start)
-        c_i = jnp.full((cap + 1, C), n_total, dtype=jnp.int32)
-        src = jnp.where(m, g.edge_src, cap)
-        p = jnp.where(m, pos, C)
-        c_i = c_i.at[src, p].set(g.indices, mode="drop")
-        n_i = jax.ops.segment_sum(
-            m.astype(jnp.int32), g.edge_src, num_segments=cap + 1
-        )[:cap]
-        cand.append(c_i)
-        cnt.append(n_i)
+
+    if k > 0:
+        words_k = jnp.stack([bind.words[q] for q in spec.child_qnodes])
+        cand_k, cnt_k = kern.stwig_expand(
+            words_k,
+            g.indices,
+            dst_labels,
+            g.edge_src,
+            seg_start,
+            root_ok_e,
+            child_labels=spec.child_labels,
+            child_bound=spec.child_bound,
+            child_cap=C,
+            cap=cap,
+            n_total=n_total,
+        )
+        # per child: (cap+1, C) ghost-padded candidate ids / (cap,) counts
+        cand = [cand_k[i] for i in range(k)]
+        cnt = [cnt_k[i] for i in range(k)]
+    else:  # pragma: no cover — STwigs always have ≥1 child
+        cand, cnt = [], []
 
     # ---- prune roots missing required children ----------------------------
     for i in range(k):
@@ -141,7 +145,7 @@ def match_stwig_shard(
 
     n_roots = jnp.sum(root_mask, dtype=jnp.int32)
 
-    # ---- step 3: select this round's chunk of roots ------------------------
+    # ---- select this round's chunk of roots --------------------------------
     rank = _exclusive_cumsum(root_mask)
     lo = round_idx.astype(jnp.int32) * R
     sel = root_mask & (rank >= lo) & (rank < lo + R)
@@ -201,7 +205,7 @@ def match_stwig_shard(
     new_words = []
     for pos_, _q in enumerate(spec.qnodes):
         col = cols[:, pos_]
-        new_words.append(jnp_bitset_build(col, valid, W))
+        new_words.append(kern.bitset_build(col, valid, W))
     contrib = jnp.stack(new_words)  # (width, W)
 
     table = STwigTable(

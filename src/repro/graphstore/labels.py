@@ -1,90 +1,31 @@
-"""Label index + packed-bitset utilities.
+"""Label index + packed-bitset re-exports.
 
 The paper's only index is the *string index* (label → node IDs): linear space,
 linear build, O(1) update (Table 1 row "STwig"). Here the label alphabet is
 already integer-coded, so the index is a per-shard counting sort — built once
-in ``PartitionedGraph.build``; this module provides the query-side helpers and
-the packed-uint32 bitsets that replace Trinity's remote ``hasLabel`` /
-binding-set RPCs (DESIGN.md §2).
+in ``PartitionedGraph.build``; this module provides the query-side helpers.
 
-Bitset convention: bit ``i`` of word ``i // 32`` is ``(w >> (i % 32)) & 1``.
-Bitsets cover global ids ``[0, n_total]`` inclusive of the ghost id
-``n_total`` (always 0).
+The packed-uint32 bitsets that replace Trinity's remote ``hasLabel`` /
+binding-set RPCs (DESIGN.md §2) live in `repro.kernels.bitset.ref` — the
+single canonical implementation, registered as the ``jnp`` backend by
+`repro.core.backend` — and are only re-exported here for compatibility. No
+bit twiddling happens in this package.
 """
 from __future__ import annotations
 
 import numpy as np
 
-import jax.numpy as jnp
-
-WORD_BITS = 32
-
-
-def n_words(n_bits: int) -> int:
-    return (n_bits + WORD_BITS - 1) // WORD_BITS
-
-
-# --------------------------------------------------------------------- numpy
-def pack_bitset(mask: np.ndarray) -> np.ndarray:
-    """Pack a bool array (n,) into uint32 words (ceil(n/32),)."""
-    n = mask.shape[0]
-    pad = (-n) % WORD_BITS
-    m = np.concatenate([mask.astype(np.uint8), np.zeros(pad, np.uint8)])
-    bits = m.reshape(-1, WORD_BITS).astype(np.uint32)
-    shifts = np.arange(WORD_BITS, dtype=np.uint32)
-    return (bits << shifts).sum(axis=1, dtype=np.uint32)
-
-
-def unpack_bitset(words: np.ndarray, n_bits: int) -> np.ndarray:
-    shifts = np.arange(WORD_BITS, dtype=np.uint32)
-    bits = (words[:, None] >> shifts) & np.uint32(1)
-    return bits.reshape(-1)[:n_bits].astype(bool)
-
-
-def bitset_test_np(words: np.ndarray, ids: np.ndarray) -> np.ndarray:
-    w = words[ids // WORD_BITS]
-    return ((w >> (ids % WORD_BITS).astype(np.uint32)) & np.uint32(1)).astype(bool)
-
-
-# ----------------------------------------------------------------------- jnp
-def jnp_bitset_test(words: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
-    """Vectorized membership test. ``ids`` int32 >= 0; out-of-range ids clamp
-    onto the final (always-zero) ghost word region — callers pad with the
-    ghost id, never with a real id."""
-    word_idx = ids // WORD_BITS
-    bit = (ids % WORD_BITS).astype(jnp.uint32)
-    w = jnp.take(words, word_idx, mode="clip")
-    return ((w >> bit) & jnp.uint32(1)).astype(jnp.bool_)
-
-
-def jnp_bitset_build(ids: jnp.ndarray, valid: jnp.ndarray, nwords: int) -> jnp.ndarray:
-    """Build a packed bitset from (possibly duplicated) ids with a validity
-    mask. XLA has no scatter-OR combiner, so scatter booleans then pack 32
-    lanes per word (duplicate-safe); the Pallas `bitset` kernel does the
-    packed scatter-OR natively on TPU."""
-    n_bits = nwords * WORD_BITS
-    idx = jnp.where(valid, ids, n_bits)
-    bits = jnp.zeros((n_bits,), jnp.bool_).at[idx].set(True, mode="drop")
-    lanes = bits.reshape(nwords, WORD_BITS).astype(jnp.uint32)
-    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
-    return jnp.sum(lanes << shifts, axis=1, dtype=jnp.uint32)
-
-
-def jnp_bitset_or(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    return jnp.bitwise_or(a, b)
-
-
-def jnp_bitset_popcount(words: jnp.ndarray) -> jnp.ndarray:
-    """Total number of set bits (binding-set cardinality, used by the join
-    order cost model)."""
-    return jnp.sum(_popcount32(words))
-
-
-def _popcount32(w: jnp.ndarray) -> jnp.ndarray:
-    w = w - ((w >> 1) & jnp.uint32(0x55555555))
-    w = (w & jnp.uint32(0x33333333)) + ((w >> 2) & jnp.uint32(0x33333333))
-    w = (w + (w >> 4)) & jnp.uint32(0x0F0F0F0F)
-    return (w * jnp.uint32(0x01010101)) >> 24
+from repro.kernels.bitset.ref import (  # noqa: F401  (compat re-exports)
+    WORD_BITS,
+    bitset_test_np,
+    build_reference as jnp_bitset_build,
+    lookup_reference as jnp_bitset_test,
+    n_words,
+    or_reference as jnp_bitset_or,
+    pack_bitset,
+    popcount_reference as jnp_bitset_popcount,
+    unpack_bitset,
+)
 
 
 class LabelIndex:

@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# OPTIONAL layer. Add <name>.py (or .cu) + ref.py ONLY for compute
+# hot-spots the paper itself optimizes with a custom kernel. Matching
+# hot-path kernels (bitset, stwig_expand, hash_join) are selected via the
+# `Kernels` registry in `repro.core.backend` — register new backends there
+# instead of adding per-package dispatch shims.

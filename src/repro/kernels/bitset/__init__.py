@@ -1,16 +1,22 @@
-from repro.kernels.bitset.bitset import (
-    bitset_lookup,
-    bitset_pack,
-    bitset_unpack,
-    candidate_filter,
-)
-from repro.kernels.bitset import ops, ref
+"""Packed-bitset kernels. `ref` (pure jnp, light) loads eagerly; the Pallas
+kernel module only loads when one of its ops is first touched, so jnp-only
+sessions never pay the jax.experimental.pallas import.
 
-__all__ = [
-    "bitset_lookup",
-    "bitset_pack",
-    "bitset_unpack",
-    "candidate_filter",
-    "ops",
-    "ref",
-]
+NOTE: the old `ops.py` jitted use_pallas/jnp dispatch was deleted — backend
+selection lives in the `Kernels` registry (`repro.core.backend`) now.
+"""
+from repro.kernels.bitset import ref
+
+_PALLAS_OPS = ("bitset_lookup", "bitset_pack", "bitset_unpack", "candidate_filter")
+
+__all__ = [*_PALLAS_OPS, "ref"]
+
+
+def __getattr__(name):  # PEP 562 lazy import of the Pallas kernels
+    if name in _PALLAS_OPS:
+        from repro.kernels.bitset import bitset
+
+        fn = getattr(bitset, name)
+        globals()[name] = fn  # cache: bypass __getattr__ next time
+        return fn
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

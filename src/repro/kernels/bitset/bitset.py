@@ -1,4 +1,5 @@
-"""Pallas TPU kernels for packed binding bitsets (DESIGN.md §2).
+"""Pallas TPU kernels for packed binding bitsets (DESIGN.md §2; registered
+as the ``pallas`` backend's bitset ops in `repro.core.backend`).
 
 Two layouts matter in the matcher:
   * *range* ops — root-candidate masks over the shard's own contiguous id
@@ -17,7 +18,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-WORD_BITS = 32
+# the reference lookup is pure jnp on values, so the kernels reuse it on
+# their VMEM blocks — one copy of the masked bit-twiddle, everywhere
+from repro.kernels.bitset.ref import WORD_BITS, lookup_reference
 
 
 # ----------------------------------------------------------------- unpack
@@ -71,11 +74,8 @@ def bitset_pack(mask: jnp.ndarray, *, bw: int = 512, interpret: bool = False):
 
 # ----------------------------------------------------------------- lookup
 def _lookup_kernel(w_ref, id_ref, o_ref):
-    ids = id_ref[...]
-    words = w_ref[...]                       # VMEM-resident bitset
-    w = jnp.take(words, ids // WORD_BITS, mode="clip")
-    bit = (w >> (ids % WORD_BITS).astype(jnp.uint32)) & jnp.uint32(1)
-    o_ref[...] = bit.astype(jnp.bool_)
+    # w_ref: VMEM-resident bitset
+    o_ref[...] = lookup_reference(w_ref[...], id_ref[...])
 
 
 def bitset_lookup(
@@ -85,9 +85,11 @@ def bitset_lookup(
     bi: int = 2048,
     interpret: bool = False,
 ):
-    """Membership test for arbitrary int32 ids (clipped into range; callers
-    pad with the always-zero ghost id). The bitset stays VMEM-resident across
-    id tiles — per-shard bitsets are ≤ a few MB at production shard counts."""
+    """Membership test for arbitrary int32 ids. Negative or out-of-range ids
+    are masked to ``False`` in-kernel (an earlier version clipped them onto
+    word 0 / the last word, silently aliasing adversarial ids onto real
+    bits). The bitset stays VMEM-resident across id tiles — per-shard
+    bitsets are ≤ a few MB at production shard counts."""
     n = ids.shape[0]
     bi = min(bi, n)
     while n % bi:
@@ -110,10 +112,11 @@ def _cand_filter_kernel(w_ref, id_ref, lab_ref, rok_ref, o_ref, *, child_label):
     """Fused MatchSTwig step-2: per edge, dst-label equality ∧ binding-bit
     test ∧ root-candidacy — one VMEM pass instead of three XLA ops."""
     ids = id_ref[...]
-    words = w_ref[...]
-    w = jnp.take(words, ids // WORD_BITS, mode="clip")
-    bit = ((w >> (ids % WORD_BITS).astype(jnp.uint32)) & jnp.uint32(1)) > 0
-    o_ref[...] = rok_ref[...] & (lab_ref[...] == child_label) & bit
+    o_ref[...] = (
+        rok_ref[...]
+        & (lab_ref[...] == child_label)
+        & lookup_reference(w_ref[...], ids)
+    )
 
 
 def candidate_filter(

@@ -1,11 +1,55 @@
-"""Pure-jnp oracles for the bitset kernels (shared with graphstore.labels)."""
+"""Canonical packed-bitset ops: the pure-jnp reference implementations and
+the numpy host-side helpers.
+
+This module is the single source of truth for the packed-uint32 convention —
+bit ``i`` of word ``i // 32`` is ``(w >> (i % 32)) & 1``, bitsets cover
+global ids ``[0, n_total]`` inclusive of the always-zero ghost id (DESIGN.md
+§2). ``repro.graphstore.labels`` re-exports the helpers and the ``jnp``
+`Kernels` backend (`repro.core.backend`) registers the reference ops; no
+other module does its own bit twiddling.
+
+Out-of-range semantics: ``lookup_reference`` (and the Pallas kernel it is
+the oracle for) maps negative or past-the-end ids to ``False`` — an id that
+names no bit is a member of no set. (An earlier version clipped, silently
+aliasing bad ids onto word 0 / the last word.)
+"""
 from __future__ import annotations
+
+import numpy as np
 
 import jax.numpy as jnp
 
-from repro.graphstore.labels import WORD_BITS
+WORD_BITS = 32
 
 
+def n_words(n_bits: int) -> int:
+    return (n_bits + WORD_BITS - 1) // WORD_BITS
+
+
+# --------------------------------------------------------------------- numpy
+def pack_bitset(mask: np.ndarray) -> np.ndarray:
+    """Pack a bool array (n,) into uint32 words (ceil(n/32),)."""
+    n = mask.shape[0]
+    pad = (-n) % WORD_BITS
+    m = np.concatenate([mask.astype(np.uint8), np.zeros(pad, np.uint8)])
+    bits = m.reshape(-1, WORD_BITS).astype(np.uint32)
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    return (bits << shifts).sum(axis=1, dtype=np.uint32)
+
+
+def unpack_bitset(words: np.ndarray, n_bits: int) -> np.ndarray:
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    bits = (words[:, None] >> shifts) & np.uint32(1)
+    return bits.reshape(-1)[:n_bits].astype(bool)
+
+
+def bitset_test_np(words: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Host-side membership test; ids must be in range (no masking)."""
+    w = words[ids // WORD_BITS]
+    return ((w >> (ids % WORD_BITS).astype(np.uint32)) & np.uint32(1)).astype(bool)
+
+
+# ----------------------------------------------------------------------- jnp
 def unpack_reference(words: jnp.ndarray) -> jnp.ndarray:
     shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
     bits = (words[:, None] >> shifts) & jnp.uint32(1)
@@ -20,8 +64,38 @@ def pack_reference(mask: jnp.ndarray) -> jnp.ndarray:
 
 
 def lookup_reference(words: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized membership test. Negative or out-of-range ids are ``False``
+    (not clipped onto a real word)."""
+    in_range = (ids >= 0) & (ids < words.shape[0] * WORD_BITS)
     w = jnp.take(words, ids // WORD_BITS, mode="clip")
-    return ((w >> (ids % WORD_BITS).astype(jnp.uint32)) & 1).astype(jnp.bool_)
+    bit = ((w >> (ids % WORD_BITS).astype(jnp.uint32)) & jnp.uint32(1)) > 0
+    return bit & in_range
+
+
+def build_reference(ids: jnp.ndarray, valid: jnp.ndarray, nwords: int) -> jnp.ndarray:
+    """Build a packed bitset from (possibly duplicated) ids with a validity
+    mask. XLA has no scatter-OR combiner, so scatter booleans then pack 32
+    lanes per word (duplicate-safe); the Pallas backend packs in-kernel."""
+    n_bits = nwords * WORD_BITS
+    idx = jnp.where(valid, ids, n_bits)
+    bits = jnp.zeros((n_bits,), jnp.bool_).at[idx].set(True, mode="drop")
+    return pack_reference(bits)
+
+
+def or_reference(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.bitwise_or(a, b)
+
+
+def popcount_reference(words: jnp.ndarray) -> jnp.ndarray:
+    """Total number of set bits (binding-set cardinality)."""
+    return jnp.sum(_popcount32(words))
+
+
+def _popcount32(w: jnp.ndarray) -> jnp.ndarray:
+    w = w - ((w >> 1) & jnp.uint32(0x55555555))
+    w = (w & jnp.uint32(0x33333333)) + ((w >> 2) & jnp.uint32(0x33333333))
+    w = (w + (w >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (w * jnp.uint32(0x01010101)) >> 24
 
 
 def candidate_filter_reference(words, dst_ids, dst_labels, root_ok, child_label):

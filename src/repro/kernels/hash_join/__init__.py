@@ -1,0 +1,14 @@
+"""Sort-merge join probe kernel. `ref` (pure jnp, light) loads eagerly; the
+Pallas kernel module only loads when `hash_join_probe` is first touched."""
+from repro.kernels.hash_join import ref
+
+__all__ = ["hash_join_probe", "ref"]
+
+
+def __getattr__(name):  # PEP 562 lazy import of the Pallas kernel
+    if name == "hash_join_probe":
+        from repro.kernels.hash_join.hash_join import hash_join_probe as fn
+
+        globals()["hash_join_probe"] = fn  # cache: bypass __getattr__ next time
+        return fn
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

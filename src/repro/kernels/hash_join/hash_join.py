@@ -1,0 +1,102 @@
+"""Pallas TPU kernel for the sort-merge join probe (paper §4.2 step 3).
+
+Build side resident in VMEM: sorted hashed keys, their validity, and the
+(narrow) exact key columns — join tables are the paper's memory-bounded
+pipeline blocks. Probe side tiled over the grid; per probe key a fully
+vectorized binary search (static ceil(log2(capA)) compare/select steps)
+yields the run start, then a static ``dup_cap`` window is verified: hash
+equality ∧ build/probe validity ∧ exact key-column equality, all in-kernel.
+Only the wide payload gather stays in XLA (it would blow VMEM).
+
+Oracle: `repro.kernels.hash_join.ref.probe_reference` (the code previously
+inlined in `repro.core.join.sort_merge_join`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(
+    ka_ref, akey_ref, avalid_ref, kb_ref, bkey_ref, bvalid_ref,
+    hit_ref, idx_ref, *, cap_a: int, steps: int, dup_cap: int, nk: int,
+):
+    ka = ka_ref[...]             # (capA,)
+    kb = kb_ref[...]             # (BB,)
+    bb = kb.shape[0]
+
+    lo = jnp.zeros((bb,), jnp.int32)
+    hi = jnp.full((bb,), cap_a, jnp.int32)
+    for _ in range(steps):       # static unroll: ceil(log2(capA+1)) steps
+        # `active` guards converged lanes: once lo == hi an unguarded
+        # extra step would overshoot past the true lower bound
+        active = lo < hi
+        mid = (lo + hi) // 2
+        vals = jnp.take(ka, jnp.minimum(mid, cap_a - 1))
+        go_right = active & (vals < kb)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+
+    probe = lo[:, None] + jax.lax.broadcasted_iota(jnp.int32, (bb, dup_cap), 1)
+    in_range = probe < cap_a
+    pc = jnp.minimum(probe, cap_a - 1)
+    hit = (
+        in_range
+        & (jnp.take(ka, pc) == kb[:, None])
+        & bvalid_ref[...][:, None]
+        & jnp.take(avalid_ref[...], pc)
+    )
+    for j in range(nk):          # exact-key verification (hash collisions)
+        hit &= jnp.take(akey_ref[...][:, j], pc) == bkey_ref[...][:, j][:, None]
+    hit_ref[...] = hit
+    idx_ref[...] = pc
+
+
+def hash_join_probe(
+    ka_sorted: jnp.ndarray,
+    a_keys: jnp.ndarray,
+    a_valid: jnp.ndarray,
+    kb: jnp.ndarray,
+    b_keys: jnp.ndarray,
+    b_valid: jnp.ndarray,
+    *,
+    dup_cap: int,
+    bb: int = 2048,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused lower-bound + window + exact verification; see `ref`."""
+    cap_a = ka_sorted.shape[0]
+    nk = a_keys.shape[-1]
+    n = kb.shape[0]
+    bb = min(bb, n)
+    while n % bb:
+        bb //= 2
+    # the search interval is [0, cap_a] — cap_a + 1 states, so cap_a powers
+    # of two need bit_length(cap_a) steps, not bit_length(cap_a - 1)
+    steps = max(1, cap_a.bit_length())
+    return pl.pallas_call(
+        functools.partial(
+            _probe_kernel, cap_a=cap_a, steps=steps, dup_cap=dup_cap, nk=nk
+        ),
+        grid=(n // bb,),
+        in_specs=[
+            pl.BlockSpec((cap_a,), lambda i: (0,)),
+            pl.BlockSpec((cap_a, nk), lambda i: (0, 0)),
+            pl.BlockSpec((cap_a,), lambda i: (0,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb, nk), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, dup_cap), lambda i: (i, 0)),
+            pl.BlockSpec((bb, dup_cap), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, dup_cap), jnp.bool_),
+            jax.ShapeDtypeStruct((n, dup_cap), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ka_sorted, a_keys, a_valid, kb, b_keys, b_valid)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused sort-merge join probe.
+
+Factored out of `repro.core.join.sort_merge_join`: given the build side
+sorted by hashed key, find each probe key's run start (lower bound), expand
+a static ``dup_cap`` window, and verify hash equality, row validity AND
+exact key-column equality — the full probe, so hash collisions are resolved
+here and the caller only gathers payloads for true hits.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def probe_reference(
+    ka_sorted: jnp.ndarray,   # (capA,) uint32 ascending hashed keys
+    a_keys: jnp.ndarray,      # (capA, nk) int32 key columns, same order
+    a_valid: jnp.ndarray,     # (capA,) bool, same order
+    kb: jnp.ndarray,          # (capB,) uint32 hashed probe keys
+    b_keys: jnp.ndarray,      # (capB, nk) int32 probe key columns
+    b_valid: jnp.ndarray,     # (capB,) bool
+    *,
+    dup_cap: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns ``hit (capB, dup_cap)`` bool (exact-verified) and
+    ``idx (capB, dup_cap)`` int32 positions into the sorted build side."""
+    cap_a = ka_sorted.shape[0]
+    lo = jnp.searchsorted(ka_sorted, kb, side="left").astype(jnp.int32)
+    probe = lo[:, None] + jnp.arange(dup_cap, dtype=jnp.int32)[None, :]
+    in_range = probe < cap_a
+    pc = jnp.minimum(probe, cap_a - 1)
+    hit = (
+        in_range
+        & (ka_sorted[pc] == kb[:, None])
+        & b_valid[:, None]
+        & a_valid[pc]
+    )
+    for j in range(a_keys.shape[-1]):  # exact-key verification (collisions)
+        hit &= a_keys[pc, j] == b_keys[:, j][:, None]
+    return hit, pc

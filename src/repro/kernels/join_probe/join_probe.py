@@ -23,12 +23,15 @@ def _probe_kernel(ka_ref, kb_ref, lo_ref, *, cap_a: int, steps: int):
     bb = kb.shape[0]
     lo = jnp.zeros((bb,), jnp.int32)
     hi = jnp.full((bb,), cap_a, jnp.int32)
-    for _ in range(steps):           # static unroll: ceil(log2(capA)) steps
+    for _ in range(steps):           # static unroll: ceil(log2(capA+1)) steps
+        # `active` guards converged lanes: an unguarded extra step past
+        # lo == hi would overshoot the true lower bound
+        active = lo < hi
         mid = (lo + hi) // 2
         vals = jnp.take(ka, jnp.minimum(mid, cap_a - 1))
-        go_right = vals < kb
+        go_right = active & (vals < kb)
         lo = jnp.where(go_right, mid + 1, lo)
-        hi = jnp.where(go_right, hi, mid)
+        hi = jnp.where(active & ~go_right, mid, hi)
     lo_ref[...] = lo
 
 
@@ -45,7 +48,10 @@ def probe_lower_bound(
     bb = min(bb, n)
     while n % bb:
         bb //= 2
-    steps = max(1, (cap_a - 1).bit_length())
+    # interval [0, cap_a] has cap_a + 1 states: power-of-two cap_a needs
+    # bit_length(cap_a) steps — bit_length(cap_a - 1) was one short, and the
+    # off-by-one surfaced exactly when a duplicate run filled the window
+    steps = max(1, cap_a.bit_length())
     return pl.pallas_call(
         functools.partial(_probe_kernel, cap_a=cap_a, steps=steps),
         grid=(n // bb,),

@@ -1,0 +1,16 @@
+"""Fused STwig expansion kernel. `ref` (pure jnp, light) loads eagerly; the
+Pallas kernel module only loads when `stwig_expand` is first touched."""
+from repro.kernels.stwig_expand import ref
+
+__all__ = ["stwig_expand", "ref"]
+
+
+def __getattr__(name):  # PEP 562 lazy import of the Pallas kernel
+    if name == "stwig_expand":
+        from repro.kernels.stwig_expand.stwig_expand import stwig_expand as fn
+
+        # rebind over the submodule attribute the import machinery just set
+        # on this package, so later lookups get the function, not the module
+        globals()["stwig_expand"] = fn
+        return fn
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the fused STwig expansion (MatchSTwig steps 2-3).
+
+Factored out of `repro.core.match.match_stwig_shard`'s per-child loop so the
+logic exists once, behind the `Kernels` registry: per-child candidate-edge
+filtering (dst-label equality ∧ binding-bit membership ∧ root candidacy)
+followed by per-root compaction into fixed-capacity candidate lists.
+
+Contract (shared with the Pallas kernel):
+  * ``cand[c, r, p]`` is the ``p``-th (in edge order) surviving destination
+    of root row ``r`` for child ``c``; unused slots hold the ghost id
+    ``n_total``. Row ``cap`` is a write-off row for padded edges.
+  * ``cnt[c, r]`` is the EXACT per-root candidate count — it may exceed
+    ``child_cap`` (the caller uses that to flag overflow); only the first
+    ``child_cap`` candidates are materialized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitset.ref import lookup_reference
+
+
+def _exclusive_cumsum(m: jnp.ndarray) -> jnp.ndarray:
+    c = jnp.cumsum(m.astype(jnp.int32))
+    return c - m.astype(jnp.int32)
+
+
+def stwig_expand_reference(
+    words_k: jnp.ndarray,     # (k, W) uint32 binding bitsets, row per child
+    dst_ids: jnp.ndarray,     # (E,) int32 edge destination global ids
+    dst_labels: jnp.ndarray,  # (E,) int32 destination labels
+    edge_src: jnp.ndarray,    # (E,) int32 local source rows, pad = cap
+    seg_start: jnp.ndarray,   # (E,) int32 edge index of src's first edge
+    root_ok: jnp.ndarray,     # (E,) bool root-candidacy per edge
+    *,
+    child_labels: tuple[int, ...],
+    child_bound: tuple[bool, ...],
+    child_cap: int,
+    cap: int,
+    n_total: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns ``cand (k, cap+1, child_cap)`` and ``cnt (k, cap)``."""
+    k = len(child_labels)
+    C = child_cap
+    cands, cnts = [], []
+    for i in range(k):
+        m = root_ok & (dst_labels == child_labels[i])
+        if child_bound[i]:
+            m &= lookup_reference(words_k[i], dst_ids)
+        ecs = _exclusive_cumsum(m)
+        pos = ecs - jnp.take(ecs, seg_start)
+        c_i = jnp.full((cap + 1, C), n_total, dtype=jnp.int32)
+        src = jnp.where(m, edge_src, cap)
+        p = jnp.where(m, pos, C)
+        c_i = c_i.at[src, p].set(dst_ids, mode="drop")
+        n_i = jax.ops.segment_sum(
+            m.astype(jnp.int32), edge_src, num_segments=cap + 1
+        )[:cap]
+        cands.append(c_i)
+        cnts.append(n_i)
+    return jnp.stack(cands), jnp.stack(cnts)

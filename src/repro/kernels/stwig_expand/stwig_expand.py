@@ -1,0 +1,140 @@
+"""Pallas TPU kernel fusing MatchSTwig steps 2-3 (paper Algorithm 1).
+
+One pass over the shard's edge array does, per child of the STwig:
+  * the candidate filter — dst-label equality ∧ binding-bit membership
+    (bitsets VMEM-resident, out-of-range ids masked False) ∧ root candidacy;
+  * per-root compaction — surviving destinations are appended to their
+    source row's fixed-capacity candidate list.
+
+The filter is fully vectorized per edge tile; the compaction walks the tile
+serially with scalar dynamic stores (TPU supports single-element dynamic
+load/store; XLA has no scatter-append at all, which is why the jnp oracle
+needs a cumsum + segment-rank detour). The grid is sequential over edge
+tiles and the outputs are revisited with a constant index map, so the
+running per-root counts carry across tiles for free.
+
+Oracle: `repro.kernels.stwig_expand.ref.stwig_expand_reference` (the code
+previously inlined in `repro.core.match`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitset.ref import lookup_reference
+
+
+def _expand_kernel(
+    w_ref,      # (k, W) uint32 binding bitsets
+    dst_ref,    # (BE,) int32 destination ids
+    lab_ref,    # (BE,) int32 destination labels
+    src_ref,    # (BE,) int32 local source rows
+    rok_ref,    # (BE,) bool root-candidacy
+    cand_ref,   # (k, cap+1, C) int32 out — revisited every tile
+    cnt_ref,    # (k, cap+1) int32 out — revisited every tile
+    *,
+    child_labels: tuple[int, ...],
+    child_bound: tuple[bool, ...],
+    C: int,
+    n_total: int,
+    be: int,
+):
+    k = len(child_labels)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        cand_ref[...] = jnp.full(cand_ref.shape, n_total, jnp.int32)
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.int32)
+
+    ids = dst_ref[...]
+    labs = lab_ref[...]
+    rok = rok_ref[...]
+    words = w_ref[...]
+
+    # ---- vectorized per-child filter over the tile ------------------------
+    masks = []
+    for c in range(k):
+        m = rok & (labs == child_labels[c])
+        if child_bound[c]:
+            m &= lookup_reference(words[c], ids)
+        masks.append(m)
+    mk = jnp.stack(masks)  # (k, BE)
+
+    # ---- serial per-root compaction (scalar dynamic stores) ---------------
+    def body(e, _):
+        s = src_ref[e]
+        d = ids[e]
+        for c in range(k):
+
+            @pl.when(mk[c, e])
+            def _append(c=c):
+                p = cnt_ref[c, s]
+
+                @pl.when(p < C)
+                def _store():
+                    cand_ref[c, s, p] = d
+
+                # the count keeps growing past C: callers detect overflow
+                cnt_ref[c, s] = p + 1
+
+        return 0
+
+    jax.lax.fori_loop(0, be, body, 0)
+
+
+def stwig_expand(
+    words_k: jnp.ndarray,     # (k, W) uint32
+    dst_ids: jnp.ndarray,     # (E,) int32
+    dst_labels: jnp.ndarray,  # (E,) int32
+    edge_src: jnp.ndarray,    # (E,) int32, pad = cap (masked out via root_ok)
+    seg_start: jnp.ndarray,   # (E,) int32 — unused here (the sequential walk
+    #                           carries counts); kept for oracle parity
+    root_ok: jnp.ndarray,     # (E,) bool
+    *,
+    child_labels: tuple[int, ...],
+    child_bound: tuple[bool, ...],
+    child_cap: int,
+    cap: int,
+    n_total: int,
+    be: int = 2048,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused filter + compaction: ``cand (k, cap+1, C)``, ``cnt (k, cap)``."""
+    del seg_start
+    k = len(child_labels)
+    assert k >= 1 and words_k.shape[0] == k
+    E = dst_ids.shape[0]
+    be = min(be, E)
+    while E % be:
+        be //= 2
+    cand, cnt = pl.pallas_call(
+        functools.partial(
+            _expand_kernel,
+            child_labels=tuple(child_labels),
+            child_bound=tuple(child_bound),
+            C=child_cap,
+            n_total=n_total,
+            be=be,
+        ),
+        grid=(E // be,),
+        in_specs=[
+            pl.BlockSpec(words_k.shape, lambda i: (0, 0)),
+            pl.BlockSpec((be,), lambda i: (i,)),
+            pl.BlockSpec((be,), lambda i: (i,)),
+            pl.BlockSpec((be,), lambda i: (i,)),
+            pl.BlockSpec((be,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, cap + 1, child_cap), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, cap + 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, cap + 1, child_cap), jnp.int32),
+            jax.ShapeDtypeStruct((k, cap + 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(words_k, dst_ids, dst_labels, edge_src, root_ok)
+    return cand, cnt[:, :cap]

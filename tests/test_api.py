@@ -12,6 +12,9 @@ import sys
 import numpy as np
 import pytest
 
+# whole-module: subprocess 8-device parity/stream runs take minutes
+pytestmark = pytest.mark.slow
+
 from repro.api import GraphSession
 from repro.core import QueryGraph
 from repro.graphstore import PartitionedGraph, generators

@@ -8,6 +8,9 @@ import sys
 
 import pytest
 
+# whole-module: multi-device subprocess end-to-end runs
+pytestmark = pytest.mark.slow
+
 SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
 
 SCRIPT = r"""

@@ -1,10 +1,15 @@
-"""Sort-merge join vs a brute-force oracle + join-order selection."""
+"""Sort-merge join vs a brute-force oracle, failure paths (dup_cap overflow,
+hash collisions, ≥3 equal-label injectivity) + join-order selection."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:  # only the property-based sweep needs hypothesis
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.core.join import JoinTable, Schema, select_join_order, sort_merge_join
 
@@ -47,14 +52,26 @@ def _table(rows, cap, w=2):
     )
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    na=st.integers(0, 40),
-    nb=st.integers(0, 40),
-    vals=st.integers(3, 12),
-    seed=st.integers(0, 999),
-)
-def test_join_matches_bruteforce(na, nb, vals, seed):
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        na=st.integers(0, 40),
+        nb=st.integers(0, 40),
+        vals=st.integers(3, 12),
+        seed=st.integers(0, 999),
+    )
+    def test_join_matches_bruteforce(na, nb, vals, seed):
+        _join_matches_bruteforce(na, nb, vals, seed)
+
+
+def test_join_matches_bruteforce_pinned():
+    # hypothesis-free spot checks so the oracle comparison always runs
+    for na, nb, vals, seed in ((7, 9, 5, 0), (20, 20, 4, 1), (0, 5, 3, 2)):
+        _join_matches_bruteforce(na, nb, vals, seed)
+
+
+def _join_matches_bruteforce(na, nb, vals, seed):
     rng = np.random.default_rng(seed)
     qn_a, labs_a = (0, 1), (0, 1)
     qn_b, labs_b = (1, 2), (1, 0)  # node 2 shares label with node 0
@@ -82,6 +99,67 @@ def test_join_dup_overflow_flag():
         out_cap=512, dup_cap=8,
     )
     assert bool(out.overflow), "run longer than dup_cap must flag overflow"
+
+
+def test_join_dup_overflow_boundary():
+    """Run length == dup_cap is fine; dup_cap + 1 must flag overflow."""
+    rows_b = [(5, 99)]
+    for n_dup, want in ((8, False), (9, True)):
+        rows_a = [(5, i) for i in range(n_dup)]
+        ta, tb = _table(rows_a, 16), _table(rows_b, 8)
+        out, _ = sort_merge_join(
+            ta, tb, Schema((0, 1), (0, 1)), Schema((0, 2), (0, 2)),
+            out_cap=512, dup_cap=8,
+        )
+        assert bool(out.overflow) is want
+        if not want:  # results stay exact up to the cap
+            got = np.asarray(out.cols)[np.asarray(out.valid)]
+            assert got.shape[0] == n_dup
+
+
+# colliding 2-column keys through `_mix32`/`_combine_keys`, found by brute
+# force over a 4096x4096 grid (see test body for the premise check)
+_COLLIDING_A = (810, 3454)
+_COLLIDING_B = (1838, 3011)
+
+
+def test_hash_collision_rejected_by_exact_verification():
+    """Two different key tuples with the SAME combined hash must not join:
+    the probe window sees a hash hit, exact column verification kills it."""
+    from repro.core.join import _combine_keys
+
+    ka = _combine_keys(jnp.asarray([_COLLIDING_A], jnp.int32), (0, 1))
+    kb = _combine_keys(jnp.asarray([_COLLIDING_B], jnp.int32), (0, 1))
+    assert int(ka[0]) == int(kb[0]), "premise: keys must collide under _mix32"
+
+    schema_a = Schema((0, 1), (0, 1))
+    schema_b = Schema((0, 1, 2), (0, 1, 2))
+    ta = _table([_COLLIDING_A], 8)
+    # colliding (but unequal) probe row + one genuinely matching row
+    tb = _table([_COLLIDING_B + (7,), _COLLIDING_A + (9,)], 8, w=3)
+    out, schema = sort_merge_join(
+        ta, tb, schema_a, schema_b, out_cap=64, dup_cap=4
+    )
+    got = set(map(tuple, np.asarray(out.cols)[np.asarray(out.valid)].tolist()))
+    assert got == {_COLLIDING_A + (9,)}, got
+    assert not bool(out.overflow)
+
+
+def test_injectivity_filter_three_equal_label_columns():
+    """With >= 3 equal-label columns the incremental filter must also reject
+    NON-adjacent duplicate pairs introduced by the merge."""
+    schema_a = Schema((0, 1), (5, 5))
+    schema_b = Schema((1, 2), (5, 5))
+    ta = _table([(1, 2)], 8)
+    # (2, 1) closes a duplicate with column 0 (non-adjacent pair 0/2);
+    # (2, 3) is a clean extension
+    tb = _table([(2, 1), (2, 3)], 8)
+    out, schema = sort_merge_join(
+        ta, tb, schema_a, schema_b, out_cap=64, dup_cap=4
+    )
+    assert schema.qnodes == (0, 1, 2) and schema.qlabels == (5, 5, 5)
+    got = set(map(tuple, np.asarray(out.cols)[np.asarray(out.valid)].tolist()))
+    assert got == {(1, 2, 3)}, got
 
 
 def test_select_join_order_connected():

@@ -7,6 +7,9 @@ import sys
 
 import pytest
 
+# whole-module: subprocess 2-device pipeline runs
+pytestmark = pytest.mark.slow
+
 from repro.launch.pipeline import bubble_fraction
 
 SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")

@@ -3,6 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# whole-module: end-to-end match + LM training runs take minutes
+pytestmark = pytest.mark.slow
 
 from repro import optim
 from repro.configs.base import LMConfig
