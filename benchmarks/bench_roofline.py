@@ -1,5 +1,5 @@
 """§Roofline: report the three-term roofline for every dry-run artifact
-(single-pod mesh) — produced by ``python -m repro.launch.dryrun --all``."""
+(single-pod mesh) — produced by ``python -m repro.extras.dryrun --all``."""
 from __future__ import annotations
 
 import json
@@ -11,7 +11,7 @@ ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 def main() -> None:
     files = sorted(ARTIFACTS.glob("*__16x16.json"))
     if not files:
-        print("roofline_no_artifacts,0.0,run `python -m repro.launch.dryrun --all`")
+        print("roofline_no_artifacts,0.0,run `python -m repro.extras.dryrun --all`")
         return
     for f in files:
         d = json.loads(f.read_text())

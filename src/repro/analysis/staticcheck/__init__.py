@@ -1,0 +1,51 @@
+"""repro.analysis.staticcheck — the repo's own static analyzer.
+
+Three passes over the matcher (DESIGN.md §5 "Checked invariants"):
+
+  a. jaxpr contract checker (`contracts`, `engines`): every registered
+     `Kernels` op and every engine entry point abstractly traced and its
+     jaxpr walked — output dtypes as declared, no 64-bit values, no host
+     callbacks in hot paths;
+  b. retrace detector (`engines`, plus `cachekeys` statically): one logical
+     `ExecutableCache` key traces exactly once across run/stream/re-stream;
+  c. architecture lint (`archlint`): AST rules keeping bit-twiddling,
+     module-level jit state, engine construction, and stream consumers
+     where DESIGN.md says they live.
+
+Run as ``python -m repro.analysis.staticcheck [--json]`` (exit 1 on any
+finding) or through the pytest suite (`tests/test_staticcheck.py`).
+"""
+from __future__ import annotations
+
+import pathlib
+
+from repro.analysis.staticcheck.findings import (  # noqa: F401
+    Finding,
+    Rule,
+    RULES,
+    report_json,
+)
+
+
+def run_all(
+    repo_root: "pathlib.Path | str | None" = None,
+    *,
+    engines: bool = True,
+    kernel_backends=None,
+) -> "list[Finding]":
+    """All passes; the one-call entry the CLI and the test suite share."""
+    from repro.analysis.staticcheck import archlint, cachekeys, contracts
+    from repro.analysis.staticcheck import engines as engines_mod
+
+    if repo_root is None:
+        repo_root = pathlib.Path(__file__).resolve().parents[4]
+    repo_root = pathlib.Path(repo_root)
+
+    findings = list(contracts.check_kernel_contracts(kernel_backends))
+    if engines:
+        findings.extend(engines_mod.check_engines(
+            kernels=kernel_backends or engines_mod.KERNEL_BACKENDS,
+        ))
+    findings.extend(cachekeys.check_cache_keys(repo_root))
+    findings.extend(archlint.run(repo_root))
+    return findings

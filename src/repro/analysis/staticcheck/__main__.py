@@ -1,0 +1,53 @@
+"""CLI: ``python -m repro.analysis.staticcheck [--json] [--no-engines]
+[--x64] [--root DIR]``. Exit status 1 when any finding survives, 0 on a
+clean tree — the CI gate (`.github/workflows/ci.yml` staticcheck job)."""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.staticcheck",
+        description="jaxpr contracts + retrace detector + architecture lint",
+    )
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable report on stdout")
+    ap.add_argument("--no-engines", action="store_true",
+                    help="skip the live engine probe (pure static + abstract "
+                         "tracing only; seconds instead of a minute)")
+    ap.add_argument("--x64", action="store_true",
+                    help="trace kernel contracts and engine probes with jax "
+                         "x64 enabled to surface weak-type promotions; "
+                         "restricts to the `jnp` backend (pallas "
+                         "interpret-mode emulation runs its grid loop in "
+                         "int64 by itself)")
+    ap.add_argument("--root", type=pathlib.Path, default=None,
+                    help="repo root (default: inferred from this file)")
+    args = ap.parse_args(argv)
+
+    if args.x64:
+        import jax
+
+        jax.config.update("jax_enable_x64", True)
+
+    from repro.analysis.staticcheck import report_json, run_all
+
+    findings = run_all(
+        args.root,
+        engines=not args.no_engines,
+        kernel_backends=("jnp",) if args.x64 else None,
+    )
+    if args.json:
+        print(report_json(findings))
+    else:
+        for f in findings:
+            print(f)
+        print(f"staticcheck: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,159 @@
+"""Jaxpr contract checker (staticcheck pass a).
+
+Abstractly traces every registered `Kernels` op on every registered backend
+against the `OpContract` table declared next to the ops in
+`repro.core.backend`, then walks the jaxprs (recursing into pjit /
+shard_map / pallas_call / scan sub-jaxprs) to enforce:
+
+  * ``jaxpr-out-dtype``         — op outputs match the declared dtypes
+                                  (ids int32, bitset words uint32, flags
+                                  bool) and the op traces at all;
+  * ``jaxpr-dtype-width``       — no 64-bit value anywhere in the trace
+                                  (run under ``--x64`` / JAX_ENABLE_X64=1 to
+                                  make silent weak-type promotion visible);
+  * ``jaxpr-banned-primitive``  — no host callbacks or device transfers in
+                                  hot paths (`pure_callback`,
+                                  `debug_callback`, `device_put`, ...).
+
+Tracing is abstract — nothing executes, so the pass costs milliseconds per
+op. New kernels get checked automatically: `register_backend` binds every
+backend to a contract tuple (see `repro.core.backend.OpContract`).
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+
+from repro.analysis.staticcheck.findings import Finding, rule
+from repro.core import backend as backend_lib
+
+rule("jaxpr-out-dtype", "kernels",
+     "op output dtype differs from its declared OpContract (or the op "
+     "fails to trace)")
+rule("jaxpr-dtype-width", "kernels",
+     "64-bit value (float64/int64/uint64) inside a hot-path jaxpr")
+rule("jaxpr-banned-primitive", "kernels",
+     "host callback / transfer primitive inside a hot-path jaxpr")
+
+WIDE_DTYPES = ("float64", "int64", "uint64", "complex128")
+BANNED_PRIMITIVES = {
+    "pure_callback",
+    "io_callback",
+    "debug_callback",
+    "callback",
+    "infeed",
+    "outfeed",
+    "device_put",
+    "copy_to_host_async",
+}
+
+
+# ------------------------------------------------------------- jaxpr walking
+def _jaxpr_of(obj):
+    """Normalize ClosedJaxpr → Jaxpr; return None for non-jaxpr objects."""
+    inner = getattr(obj, "jaxpr", None)
+    if inner is not None and hasattr(inner, "eqns"):
+        return inner
+    return obj if hasattr(obj, "eqns") else None
+
+
+def _sub_jaxprs(params: dict):
+    for v in params.values():
+        stack = [v]
+        while stack:
+            x = stack.pop()
+            if isinstance(x, (tuple, list)):
+                stack.extend(x)
+                continue
+            j = _jaxpr_of(x)
+            if j is not None and hasattr(j, "eqns"):
+                yield j
+
+
+def iter_eqns(jaxpr):
+    """Every equation in ``jaxpr`` and (recursively) its sub-jaxprs —
+    pjit bodies, shard_map bodies, pallas kernel jaxprs, scan/cond branches."""
+    j = _jaxpr_of(jaxpr)
+    if j is None:
+        return
+    for eqn in j.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub)
+
+
+def _aval_dtype(v) -> str | None:
+    aval = getattr(v, "aval", None)
+    dt = getattr(aval, "dtype", None)
+    return str(dt) if dt is not None else None
+
+
+def check_jaxpr(jaxpr, target: str) -> list[Finding]:
+    """Walk one (closed) jaxpr: 64-bit avals and banned primitives."""
+    findings: list[Finding] = []
+    seen_wide: set[tuple[str, str]] = set()
+    seen_banned: set[str] = set()
+    for eqn in iter_eqns(jaxpr):
+        prim = eqn.primitive.name
+        if prim in BANNED_PRIMITIVES and prim not in seen_banned:
+            seen_banned.add(prim)
+            findings.append(Finding(
+                "jaxpr-banned-primitive", target, 0,
+                f"primitive `{prim}` in a hot-path trace — host callbacks "
+                "and transfers stall the device pipeline",
+            ))
+        for v in tuple(eqn.outvars) + tuple(eqn.invars):
+            dt = _aval_dtype(v)
+            if dt in WIDE_DTYPES and (dt, prim) not in seen_wide:
+                seen_wide.add((dt, prim))
+                findings.append(Finding(
+                    "jaxpr-dtype-width", target, 0,
+                    f"{dt} value at primitive `{prim}` — ids stay int32 and "
+                    "bitsets stay uint32 (linear-space discipline); make the "
+                    "narrow dtype explicit at the producer",
+                ))
+    return findings
+
+
+# ----------------------------------------------------------- kernel op pass
+def _trace_op(kern, contract) -> "jax.core.ClosedJaxpr":
+    args, kw = contract.make_args()
+    is_traced = [hasattr(a, "dtype") and hasattr(a, "shape") for a in args]
+    traced = [a for a, t in zip(args, is_traced) if t]
+
+    def call(*t):
+        it = iter(t)
+        full = [next(it) if flag else a for a, flag in zip(args, is_traced)]
+        return getattr(kern, contract.op)(*full, **kw)
+
+    return jax.make_jaxpr(call)(*traced)
+
+
+def check_kernel_contracts(
+    backends: Iterable[str] | None = None,
+) -> list[Finding]:
+    """Trace every contract-declared op on every registered backend and
+    check declared output dtypes + jaxpr-wide rules."""
+    findings: list[Finding] = []
+    names = tuple(backends) if backends else backend_lib.available_backends()
+    for name in names:
+        kern = backend_lib.get_kernels(name)
+        for contract in backend_lib.op_contracts(name):
+            target = f"kernels:{name}:{contract.op}"
+            try:
+                jaxpr = _trace_op(kern, contract)
+            except Exception as e:  # trace failure IS a contract violation
+                findings.append(Finding(
+                    "jaxpr-out-dtype", target, 0,
+                    f"op failed to trace abstractly: {type(e).__name__}: {e}",
+                ))
+                continue
+            outs = tuple(_aval_dtype(v) for v in jaxpr.jaxpr.outvars)
+            if outs != contract.out_dtypes:
+                findings.append(Finding(
+                    "jaxpr-out-dtype", target, 0,
+                    f"output dtypes {outs} != declared {contract.out_dtypes}",
+                ))
+            findings.extend(check_jaxpr(jaxpr, target))
+    return findings

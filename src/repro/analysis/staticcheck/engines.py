@@ -1,0 +1,114 @@
+"""Engine entry-point probe (staticcheck passes a+b on the live engines).
+
+Opens a tiny `GraphSession` per (engine backend × kernel backend)
+combination, installs the `ExecutableCache` recorder, and drives the real
+entry points — ``compile``, ``run`` (block-join steps), ``stream`` plus a
+re-stream (Theorem-4 gather + block-join steps on the sharded engine).
+Every executable the cache built is then re-traced with its recorded
+concrete arguments and its jaxpr walked with the same rules as the kernel
+op contracts (`contracts.check_jaxpr`).
+
+Retrace rule: after run + stream + re-stream, no logical cache key may have
+traced twice (`duplicate_traces`) and no cached jitted executable may hold
+more than one trace under its single key (`retraced_executables` — the
+silent variant where a static argument escaped the cache key; the AST-level
+companion is `cachekeys.check_cache_keys`).
+
+The probe executes real work, so it costs a few seconds per combination —
+the graph is ~100 nodes and every capacity is tiny.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.analysis.staticcheck.contracts import check_jaxpr
+from repro.analysis.staticcheck.findings import Finding, rule
+
+rule("retrace", "engine",
+     "a logical executable-cache key traced more than once across "
+     "run/stream/re-stream (or a jitted executable silently re-traced "
+     "under one key)")
+
+ENGINE_BACKENDS = ("local", "sharded")
+KERNEL_BACKENDS = ("jnp", "pallas-interpret")
+
+
+def _tiny_graph():
+    from repro.graphstore import generators
+
+    return generators.rmat(120, 420, 4, seed=3, symmetrize=True)
+
+
+def _probe_query():
+    from repro.core.query import QueryGraph
+
+    # a labeled 4-path decomposes into ≥2 STwigs, so the probe exercises
+    # match, join (block-join steps) and the sharded gather path
+    return QueryGraph.build([0, 1, 2, 3], [(0, 1), (1, 2), (2, 3)])
+
+
+def _key_head(key) -> str:
+    if isinstance(key, tuple) and key and isinstance(key[0], str):
+        return key[0]
+    return type(key).__name__
+
+
+def probe_engine(backend: str, kernels: str) -> list[Finding]:
+    """Drive one engine/kernels combination end to end and check every
+    executable it built."""
+    from repro.api.session import GraphSession
+
+    findings: list[Finding] = []
+    target = f"engine:{backend}:{kernels}"
+    recorded: dict = {}
+
+    def recorder(key, fn, args, kwargs):
+        recorded.setdefault(key, (fn, args, kwargs))
+
+    session = GraphSession.open(_tiny_graph(), backend=backend, kernels=kernels)
+    try:
+        session.cache.recorder = recorder
+        compiled = session.compile(_probe_query(), max_matches=0)
+        compiled.run(adaptive=False)
+        for _ in compiled.stream(page_size=16):
+            pass
+        for _ in compiled.stream(page_size=16):  # re-stream: all cache hits
+            pass
+
+        for key in session.cache.duplicate_traces():
+            findings.append(Finding(
+                "retrace", f"{target}:{_key_head(key)}", 0,
+                f"logical key traced more than once: {key!r}",
+            ))
+        for key, n in session.cache.retraced_executables():
+            findings.append(Finding(
+                "retrace", f"{target}:{_key_head(key)}", 0,
+                f"executable re-traced {n}x under one cache key (a static "
+                f"argument is missing from the key): {key!r}",
+            ))
+
+        for key, (fn, args, kwargs) in recorded.items():
+            ktarget = f"{target}:{_key_head(key)}"
+            try:
+                jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+            except Exception as e:
+                findings.append(Finding(
+                    "jaxpr-out-dtype", ktarget, 0,
+                    f"entry point failed to re-trace with its recorded "
+                    f"arguments: {type(e).__name__}: {e}",
+                ))
+                continue
+            findings.extend(check_jaxpr(jaxpr, ktarget))
+    finally:
+        session.close()
+    return findings
+
+
+def check_engines(
+    backends=ENGINE_BACKENDS, kernels=KERNEL_BACKENDS
+) -> list[Finding]:
+    findings: list[Finding] = []
+    for b in backends:
+        for k in kernels:
+            findings.extend(probe_engine(b, k))
+    return findings

@@ -26,7 +26,10 @@ accelerate) and `register_backend` it.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +40,99 @@ from repro.kernels.stwig_expand import ref as _expand_ref
 
 WORD_BITS = _bitset_ref.WORD_BITS
 n_words = _bitset_ref.n_words
+
+
+# ------------------------------------------------------------- op contracts
+@dataclasses.dataclass(frozen=True)
+class OpContract:
+    """Machine-checkable shape/dtype contract for one `Kernels` op.
+
+    Declared next to the ops so `register_backend` picks every backend up
+    automatically: `repro.analysis.staticcheck` abstractly traces
+    ``getattr(kernels, op)(*make_args()...)`` on every registered backend and
+    walks the jaxpr — output dtypes must equal ``out_dtypes``, no value in
+    the trace may be 64-bit wide (ids stay int32, bitsets stay uint32 — the
+    linear-space discipline ROADMAP item 2 rests on), and none of the
+    `BANNED_PRIMITIVES` (host callbacks / device transfers) may appear.
+
+    ``make_args`` returns ``(args, kwargs)`` of small *example* inputs at the
+    declared dtypes; they are traced, never executed, so cost is nil. New
+    kernels: declare a contract here (or pass ``contracts=`` to
+    `register_backend`) and the checker enforces it on every backend.
+    """
+
+    op: str
+    make_args: Callable[[], tuple[tuple, dict]]
+    out_dtypes: tuple[str, ...]
+
+
+def _ex(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _contract_bitset_pack():
+    return (_ex((64,), jnp.bool_),), {}
+
+
+def _contract_bitset_unpack():
+    return (_ex((2,), jnp.uint32),), {}
+
+
+def _contract_bitset_lookup():
+    return (_ex((2,), jnp.uint32), _ex((8,), jnp.int32)), {}
+
+
+def _contract_bitset_build():
+    return (_ex((8,), jnp.int32), _ex((8,), jnp.bool_), 2), {}
+
+
+def _contract_candidate_filter():
+    return (
+        _ex((2,), jnp.uint32),
+        _ex((16,), jnp.int32),
+        _ex((16,), jnp.int32),
+        _ex((16,), jnp.bool_),
+        1,
+    ), {}
+
+
+def _contract_stwig_expand():
+    return (
+        _ex((2, 2), jnp.uint32),   # words_k
+        _ex((16,), jnp.int32),     # dst_ids
+        _ex((16,), jnp.int32),     # dst_labels
+        _ex((16,), jnp.int32),     # edge_src
+        _ex((16,), jnp.int32),     # seg_start
+        _ex((16,), jnp.bool_),     # root_ok
+    ), dict(
+        child_labels=(1, 2),
+        child_bound=(True, False),
+        child_cap=4,
+        cap=8,
+        n_total=63,
+    )
+
+
+def _contract_hash_join_probe():
+    return (
+        _ex((16,), jnp.uint32),    # ka_sorted
+        _ex((16, 2), jnp.int32),   # a_keys
+        _ex((16,), jnp.bool_),     # a_valid
+        _ex((8,), jnp.uint32),     # kb
+        _ex((8, 2), jnp.int32),    # b_keys
+        _ex((8,), jnp.bool_),      # b_valid
+    ), dict(dup_cap=4)
+
+
+OP_CONTRACTS: tuple[OpContract, ...] = (
+    OpContract("bitset_pack", _contract_bitset_pack, ("uint32",)),
+    OpContract("bitset_unpack", _contract_bitset_unpack, ("bool",)),
+    OpContract("bitset_lookup", _contract_bitset_lookup, ("bool",)),
+    OpContract("bitset_build", _contract_bitset_build, ("uint32",)),
+    OpContract("candidate_filter", _contract_candidate_filter, ("bool",)),
+    OpContract("stwig_expand", _contract_stwig_expand, ("int32", "int32")),
+    OpContract("hash_join_probe", _contract_hash_join_probe, ("bool", "int32")),
+)
 
 
 class Kernels:
@@ -153,7 +249,7 @@ class PallasKernels(Kernels):
         from repro.kernels.bitset import bitset_pack
 
         n_bits = nwords * WORD_BITS
-        idx = jnp.where(valid, ids, n_bits)
+        idx = jnp.where(valid, ids, np.int32(n_bits))
         bits = jnp.zeros((n_bits,), jnp.bool_).at[idx].set(True, mode="drop")
         return bitset_pack(bits, interpret=self.interpret)
 
@@ -185,16 +281,33 @@ class PallasKernels(Kernels):
 # ------------------------------------------------------------------ registry
 _REGISTRY: dict[str, Callable[[], Kernels]] = {}
 _INSTANCES: dict[str, Kernels] = {}
+_CONTRACTS: dict[str, tuple[OpContract, ...]] = {}
 
 KERNEL_BACKENDS = ("auto", "jnp", "pallas", "pallas-interpret")
 
 
-def register_backend(name: str, factory: Callable[[], Kernels]) -> None:
+def register_backend(
+    name: str,
+    factory: Callable[[], Kernels],
+    *,
+    contracts: tuple[OpContract, ...] = OP_CONTRACTS,
+) -> None:
     """Register a kernel backend under ``name`` (factory called lazily,
     once). Third-party backends can register here and be selected by name
-    through `GraphSession.open(kernels=...)`."""
+    through `GraphSession.open(kernels=...)`.
+
+    Every registered backend is bound to a tuple of `OpContract`s (default:
+    the canonical `OP_CONTRACTS`) that `repro.analysis.staticcheck` enforces
+    by abstract tracing — a backend that adds ops should pass an extended
+    tuple so the new ops are checked too."""
     _REGISTRY[name] = factory
     _INSTANCES.pop(name, None)
+    _CONTRACTS[name] = contracts
+
+
+def op_contracts(name: str) -> tuple[OpContract, ...]:
+    """The contract set `register_backend` bound to backend ``name``."""
+    return _CONTRACTS.get(name, OP_CONTRACTS)
 
 
 def available_backends() -> tuple[str, ...]:

@@ -5,11 +5,32 @@ to keep: a `GraphSession` (or a standalone matcher) owns one
 `ExecutableCache`, so compiled executables have an explicit lifetime, can be
 shared across a batch of queries, and expose hit/miss counters instead of
 hiding behind process-global state.
+
+Retrace detection: every build is recorded as a trace event for its logical
+key. With ``REPRO_CHECK_RETRACE=1`` in the environment (or
+``check_retrace=True``), building the same logical key twice raises
+`RetraceError` — one logical key (schemas, caps, block size, kernels name)
+must trace exactly once, the invariant the compile/run split and the query
+server's executable sharing stand on. `retraced_executables` additionally
+catches the silent variant: a *cached* jitted function that re-traced under
+one key because a static argument escaped the key (the companion static pass
+in `repro.analysis.staticcheck` verifies key coverage at the AST level).
 """
 from __future__ import annotations
 
-from collections import OrderedDict
+import os
+from collections import Counter, OrderedDict
 from typing import Any, Callable, Hashable
+
+
+class RetraceError(RuntimeError):
+    """One logical executable-cache key traced more than once."""
+
+
+def _env_check_retrace() -> bool:
+    return os.environ.get("REPRO_CHECK_RETRACE", "").strip().lower() not in (
+        "", "0", "false",
+    )
 
 
 class ExecutableCache:
@@ -20,11 +41,21 @@ class ExecutableCache:
     ``lru_cache`` decorators.
     """
 
-    def __init__(self, maxsize: int = 512):
+    def __init__(self, maxsize: int = 512, *, check_retrace: bool | None = None):
         self.maxsize = int(maxsize)
         self._data: OrderedDict[Hashable, Any] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        # one entry per build (= one jit trace of a logical key); survives
+        # `clear()` — dropping executables does not erase the trace history
+        self.trace_log: list[Hashable] = []
+        self._traced: set[Hashable] = set()
+        self.check_retrace = (
+            _env_check_retrace() if check_retrace is None else bool(check_retrace)
+        )
+        # staticcheck hook: called as recorder(key, fn, args, kwargs) on
+        # every invocation of a cached executable (None = disabled)
+        self.recorder: Callable[..., None] | None = None
 
     def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
         """Return the cached value for ``key``, building (and storing) it on
@@ -33,13 +64,79 @@ class ExecutableCache:
             value = self._data[key]
         except KeyError:
             self.misses += 1
+            if key in self._traced and self.check_retrace:
+                raise RetraceError(
+                    f"logical key traced twice: {key!r} — the executable for "
+                    "this key was already built once this session (rebuilt "
+                    "after eviction/clear, or the key is unstable across "
+                    "calls); one logical key must trace exactly once"
+                )
+            self.trace_log.append(key)
+            self._traced.add(key)
             value = build()
             self._data[key] = value
             if len(self._data) > self.maxsize:
                 self._data.popitem(last=False)
-            return value
+            return self._wrap(key, value)
         self._data.move_to_end(key)
         self.hits += 1
+        return self._wrap(key, value)
+
+    # -------------------------------------------------- retrace diagnostics
+    def duplicate_traces(self) -> list[Hashable]:
+        """Logical keys that traced more than once (empty ⇒ invariant held)."""
+        return [k for k, n in Counter(self.trace_log).items() if n > 1]
+
+    def retraced_executables(self) -> list[tuple[Hashable, int]]:
+        """Cached jitted executables whose internal jit cache holds more than
+        one trace — a static argument varied without varying the cache key."""
+        out: list[tuple[Hashable, int]] = []
+        for key, value in self._data.items():
+            fns = value if isinstance(value, tuple) else (value,)
+            for f in fns:
+                size_fn = getattr(f, "_cache_size", None)
+                if not callable(size_fn):
+                    continue
+                try:
+                    n = int(size_fn())
+                except Exception:  # pragma: no cover - jax internals moved
+                    continue
+                if n > 1:
+                    out.append((key, n))
+        return out
+
+    def assert_no_retrace(self) -> None:
+        """Fail if any logical key traced twice or any cached executable
+        silently re-traced under its key."""
+        dup = self.duplicate_traces()
+        if dup:
+            raise RetraceError(f"logical keys traced twice: {dup!r}")
+        rex = self.retraced_executables()
+        if rex:
+            raise RetraceError(
+                "executables re-traced under a single cache key (a static "
+                f"argument is missing from the key): {rex!r}"
+            )
+
+    # ------------------------------------------------------------- plumbing
+    def _wrap(self, key: Hashable, value: Any) -> Any:
+        """With a recorder installed, intercept executable invocations so
+        staticcheck can capture (key, fn, concrete args) for jaxpr walking."""
+        rec = self.recorder
+        if rec is None:
+            return value
+
+        def wrap_fn(f):
+            def wrapped(*a, **kw):
+                rec(key, f, a, kw)
+                return f(*a, **kw)
+
+            return wrapped
+
+        if callable(value):
+            return wrap_fn(value)
+        if isinstance(value, tuple) and value and callable(value[0]):
+            return (wrap_fn(value[0]),) + tuple(value[1:])
         return value
 
     def clear(self) -> None:

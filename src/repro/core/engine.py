@@ -149,9 +149,15 @@ class SubgraphMatcher:
             ),
         )
 
-    def _join_fn(self, schema_a, schema_b, out_cap: int, dup_cap: int):
+    def _join_fn(
+        self, schema_a, schema_b, out_cap: int, dup_cap: int,
+        a_cap: int, b_cap: int,
+    ):
         """Returns (jitted join fn, merged schema). The schema is static — it
-        must not pass through jit."""
+        must not pass through jit. ``a_cap``/``b_cap`` are the operand table
+        capacities: they shape the traced program (a blocked build side is
+        narrower than a full table), so they belong to the logical key — one
+        logical key, one trace."""
         kern = self.kernels
 
         def build():
@@ -170,7 +176,9 @@ class SubgraphMatcher:
             return fn, merged
 
         return self.cache.get(
-            ("join", schema_a, schema_b, out_cap, dup_cap, kern.name), build
+            ("join", schema_a, schema_b, out_cap, dup_cap, a_cap, b_cap,
+             kern.name),
+            build,
         )
 
     # ------------------------------------------------------------------ API
@@ -259,6 +267,8 @@ class SubgraphMatcher:
                 state.schemas[idx],
                 state.plan.join_rows_cap,
                 state.plan.join_dup_cap,
+                int(acc.cols.shape[0]),
+                int(state.tables[idx].cols.shape[0]),
             )
             acc, acc_schema = fn(acc, state.tables[idx]), merged
         rows = self._materialize(acc, acc_schema, max_matches=0)
@@ -334,7 +344,9 @@ class SubgraphMatcher:
         acc, acc_schema = tables[order[0]], schemas[order[0]]
         for idx in order[1:]:
             fn, merged = self._join_fn(
-                acc_schema, schemas[idx], plan.join_rows_cap, plan.join_dup_cap
+                acc_schema, schemas[idx], plan.join_rows_cap,
+                plan.join_dup_cap,
+                int(acc.cols.shape[0]), int(tables[idx].cols.shape[0]),
             )
             acc, acc_schema = fn(acc, tables[idx]), merged
         overflow |= bool(jax.device_get(acc.overflow))

@@ -25,6 +25,8 @@ import dataclasses
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
 from repro.core.backend import Kernels, get_kernels
 
@@ -100,8 +102,10 @@ def sort_merge_join(
     BIG = jnp.uint32(0xFFFFFFFF)
     key_a = jnp.where(a.valid, _combine_keys(a.cols, pos_a), BIG)
     key_b = _combine_keys(b.cols, pos_b)
-    order = jnp.argsort(key_a)
-    ka = key_a[order]
+    # sort with an int32 payload rather than argsort: argsort's permutation
+    # is int64 under x64 and would widen every downstream gather
+    iota = jnp.arange(key_a.shape[0], dtype=jnp.int32)
+    ka, order = lax.sort((key_a, iota), num_keys=1)
     a_valid_s = a.valid[order]
 
     # build-side duplicate-run overflow detection
@@ -110,7 +114,7 @@ def sort_merge_join(
     ) | ~a_valid_s
     run_id = jnp.cumsum(run_start.astype(jnp.int32)) - 1
     run_len = jnp.zeros(ka.shape[0], jnp.int32).at[run_id].add(1)
-    dup_overflow = jnp.max(jnp.where(a_valid_s, run_len[run_id], 0)) > dup_cap
+    dup_overflow = jnp.max(jnp.where(a_valid_s, run_len[run_id], np.int32(0))) > dup_cap
 
     # windowed probe with exact-key verification — one fused backend op
     W = dup_cap
@@ -135,7 +139,7 @@ def sort_merge_join(
     ).reshape(-1)
     merged_cols = jnp.concatenate(
         [a.cols[a_rows_f]]
-        + [b.cols[b_rows_f, p][:, None] for p in extra_pos_b],
+        + [jnp.take(b.cols[:, p], b_rows_f)[:, None] for p in extra_pos_b],
         axis=1,
     )  # (nb*W, w_merged)
 
@@ -149,7 +153,7 @@ def sort_merge_join(
 
     n_rows = jnp.sum(flat_hit, dtype=jnp.int32)
     rk = jnp.cumsum(flat_hit.astype(jnp.int32)) - flat_hit.astype(jnp.int32)
-    out_pos = jnp.where(flat_hit, rk, out_cap)
+    out_pos = jnp.where(flat_hit, rk, np.int32(out_cap))
     ghost = jnp.max(a.cols)  # any value; rows are masked by `valid`
     cols = jnp.full((out_cap, wm), ghost, dtype=jnp.int32)
     cols = cols.at[out_pos].set(merged_cols, mode="drop")

@@ -24,6 +24,7 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.backend import Kernels, get_kernels, n_words
 from repro.core.plan import STwigSpec
@@ -149,12 +150,12 @@ def match_stwig_shard(
     rank = _exclusive_cumsum(root_mask)
     lo = round_idx.astype(jnp.int32) * R
     sel = root_mask & (rank >= lo) & (rank < lo + R)
-    chunk_pos = jnp.where(sel, rank - lo, R)
+    chunk_pos = jnp.where(sel, rank - lo, np.int32(R))
     roots_sel = jnp.full((R,), cap, dtype=jnp.int32)
     roots_sel = roots_sel.at[chunk_pos].set(node_slot, mode="drop")
     root_live = roots_sel < cap
     root_gid = jnp.where(
-        root_live, g.shard_id.astype(jnp.int32) * cap + roots_sel, n_total
+        root_live, g.shard_id.astype(jnp.int32) * cap + roots_sel, np.int32(n_total)
     )
 
     cand_sel = [jnp.take(cand[i], roots_sel, axis=0, mode="clip") for i in range(k)]
@@ -163,7 +164,7 @@ def match_stwig_shard(
 
     # ---- step 4: masked cross-product emission -----------------------------
     if k > 0:
-        grid = jnp.indices((C,) * k).reshape(k, -1).astype(jnp.int32)  # (k, P)
+        grid = jnp.indices((C,) * k, dtype=jnp.int32).reshape(k, -1)  # (k, P)
         P = grid.shape[1]
         child_vals = [
             jnp.take_along_axis(cand_sel[i], grid[i][None, :], axis=1)
@@ -188,7 +189,7 @@ def match_stwig_shard(
 
     n_rows = jnp.sum(flat_ok, dtype=jnp.int32)
     rk = _exclusive_cumsum(flat_ok)
-    out_pos = jnp.where(flat_ok, rk, spec.rows_cap)
+    out_pos = jnp.where(flat_ok, rk, np.int32(spec.rows_cap))
     cols = jnp.full((spec.rows_cap, spec.width), n_total, dtype=jnp.int32)
     cols = cols.at[out_pos].set(rows, mode="drop")
     valid = jnp.zeros((spec.rows_cap,), bool).at[out_pos].set(

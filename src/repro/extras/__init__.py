@@ -1,0 +1,9 @@
+"""Quarantined seed scaffolding (staticcheck `orphan-module` boundary).
+
+Modules here are runnable but unreachable from every test, benchmark,
+example and script — kept for reference (production launch dry-runs, the
+training launcher, model shape tables) rather than deleted outright. The
+architecture lint exempts this directory from the orphan rule; everything
+else under ``src/`` must stay reachable or move here. Promote a module back
+out by giving it a consumer (a test or a declared entry point) first.
+"""

@@ -16,8 +16,8 @@ on the production meshes — 16×16 (256 chips, single pod) and 2×16×16
 collective mix for EXPERIMENTS.md §Dry-run / §Roofline.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
-  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  PYTHONPATH=src python -m repro.extras.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.extras.dryrun --all [--multi-pod-only|--single-pod-only]
 """
 
 import argparse
@@ -34,7 +34,7 @@ from repro import optim
 from repro.analysis import roofline as rl
 from repro.configs import all_archs, get
 from repro.configs.base import GNNConfig, LMConfig, RecSysConfig
-from repro.launch import shapes as shapes_lib
+from repro.extras import shapes as shapes_lib
 from repro.launch.mesh import make_production_mesh
 from repro.launch.rules import make_rules
 from repro.launch.sharding import axis_rules, spec_for

@@ -16,18 +16,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import optim
-from repro.configs.base import ArchEntry, GNNConfig, LMConfig, RecSysConfig
+from repro.configs.base import ArchEntry, GNNConfig, LMConfig
 from repro.models import gnn as gnn_lib
 from repro.models import recsys as recsys_lib
 from repro.models import transformer as tf
-from repro.models.schema import ParamDef, _flatten, abstract_params
+from repro.models.schema import _flatten, abstract_params
 from repro.train.step import make_train_step
 
 F32, I32, BOOL = jnp.float32, jnp.int32, jnp.bool_

@@ -1,4 +1,4 @@
-"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+"""Training launcher: ``python -m repro.extras.train --arch <id> [...]``.
 
 Single-host, any device count; for the full-pod meshes use dryrun.py (this
 container has one real device). Wires: config registry → data pipeline →

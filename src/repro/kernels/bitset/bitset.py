@@ -51,7 +51,7 @@ def bitset_unpack(words: jnp.ndarray, *, bw: int = 512, interpret: bool = False)
 def _pack_kernel(m_ref, o_ref, *, bw: int):
     bits = m_ref[...].reshape(bw, WORD_BITS).astype(jnp.uint32)
     shifts = jax.lax.broadcasted_iota(jnp.uint32, (bw, WORD_BITS), 1)
-    o_ref[...] = jnp.sum(bits << shifts, axis=1).astype(jnp.uint32)
+    o_ref[...] = jnp.sum(bits << shifts, axis=1, dtype=jnp.uint32)
 
 
 def bitset_pack(mask: jnp.ndarray, *, bw: int = 512, interpret: bool = False):

@@ -66,9 +66,12 @@ def pack_reference(mask: jnp.ndarray) -> jnp.ndarray:
 def lookup_reference(words: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     """Vectorized membership test. Negative or out-of-range ids are ``False``
     (not clipped onto a real word)."""
-    in_range = (ids >= 0) & (ids < words.shape[0] * WORD_BITS)
-    w = jnp.take(words, ids // WORD_BITS, mode="clip")
-    bit = ((w >> (ids % WORD_BITS).astype(jnp.uint32)) & jnp.uint32(1)) > 0
+    # np.int32 keeps the word-index math at 32 bits even under x64, where a
+    # bare Python literal would arrive as an int64 scalar operand
+    wb = np.int32(WORD_BITS)
+    in_range = (ids >= 0) & (ids < np.int32(words.shape[0] * WORD_BITS))
+    w = jnp.take(words, ids // wb, mode="clip")
+    bit = ((w >> (ids % wb).astype(jnp.uint32)) & jnp.uint32(1)) > 0
     return bit & in_range
 
 
@@ -77,7 +80,7 @@ def build_reference(ids: jnp.ndarray, valid: jnp.ndarray, nwords: int) -> jnp.nd
     mask. XLA has no scatter-OR combiner, so scatter booleans then pack 32
     lanes per word (duplicate-safe); the Pallas backend packs in-kernel."""
     n_bits = nwords * WORD_BITS
-    idx = jnp.where(valid, ids, n_bits)
+    idx = jnp.where(valid, ids, np.int32(n_bits))
     bits = jnp.zeros((n_bits,), jnp.bool_).at[idx].set(True, mode="drop")
     return pack_reference(bits)
 

@@ -34,7 +34,9 @@ def _probe_kernel(
         # `active` guards converged lanes: once lo == hi an unguarded
         # extra step would overshoot past the true lower bound
         active = lo < hi
-        mid = (lo + hi) // 2
+        # >> 1, not // 2: lo/hi are non-negative and a bare Python divisor
+        # becomes an int64 scalar operand under x64
+        mid = (lo + hi) >> 1
         vals = jnp.take(ka, jnp.minimum(mid, cap_a - 1))
         go_right = active & (vals < kb)
         lo = jnp.where(go_right, mid + 1, lo)

@@ -8,7 +8,26 @@ here and the caller only gathers payloads for true hits.
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax.numpy as jnp
+
+
+def _lower_bound_i32(ka_sorted: jnp.ndarray, kb: jnp.ndarray) -> jnp.ndarray:
+    """``searchsorted(ka, kb, side='left')`` as an unrolled branchless binary
+    search in pure int32 — ``jnp.searchsorted`` runs its index arithmetic in
+    int64 under x64, which the staticcheck dtype-width contract forbids.
+    Mirrors the Pallas ``join_probe`` kernel loop."""
+    cap = ka_sorted.shape[0]
+    lo = jnp.zeros(kb.shape, jnp.int32)
+    hi = jnp.full(kb.shape, cap, jnp.int32)
+    for _ in range(max(1, int(cap).bit_length())):
+        active = lo < hi
+        mid = (lo + hi) >> 1
+        go_right = active & (jnp.take(ka_sorted, mid, mode="clip") < kb)
+        lo = jnp.where(go_right, mid + np.int32(1), lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+    return lo
 
 
 def probe_reference(
@@ -24,10 +43,10 @@ def probe_reference(
     """Returns ``hit (capB, dup_cap)`` bool (exact-verified) and
     ``idx (capB, dup_cap)`` int32 positions into the sorted build side."""
     cap_a = ka_sorted.shape[0]
-    lo = jnp.searchsorted(ka_sorted, kb, side="left").astype(jnp.int32)
+    lo = _lower_bound_i32(ka_sorted, kb)
     probe = lo[:, None] + jnp.arange(dup_cap, dtype=jnp.int32)[None, :]
-    in_range = probe < cap_a
-    pc = jnp.minimum(probe, cap_a - 1)
+    in_range = probe < np.int32(cap_a)
+    pc = jnp.minimum(probe, np.int32(cap_a - 1))
     hit = (
         in_range
         & (ka_sorted[pc] == kb[:, None])
@@ -35,5 +54,7 @@ def probe_reference(
         & a_valid[pc]
     )
     for j in range(a_keys.shape[-1]):  # exact-key verification (collisions)
-        hit &= a_keys[pc, j] == b_keys[:, j][:, None]
+        # static column slice + take: mixed advanced/scalar indexing
+        # (a_keys[pc, j]) widens the scalar index to int64 under x64
+        hit &= jnp.take(a_keys[:, j], pc, mode="clip") == b_keys[:, j][:, None]
     return hit, pc

@@ -15,6 +15,8 @@ Contract (shared with the Pallas kernel):
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -51,8 +53,10 @@ def stwig_expand_reference(
         ecs = _exclusive_cumsum(m)
         pos = ecs - jnp.take(ecs, seg_start)
         c_i = jnp.full((cap + 1, C), n_total, dtype=jnp.int32)
-        src = jnp.where(m, edge_src, cap)
-        p = jnp.where(m, pos, C)
+        # np.int32 literals: a bare Python int branch arrives as an int64
+        # scalar under x64 (staticcheck jaxpr-dtype-width)
+        src = jnp.where(m, edge_src, np.int32(cap))
+        p = jnp.where(m, pos, np.int32(C))
         c_i = c_i.at[src, p].set(dst_ids, mode="drop")
         n_i = jax.ops.segment_sum(
             m.astype(jnp.int32), edge_src, num_segments=cap + 1

@@ -17,7 +17,6 @@ pattern in the transposed direction automatically).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,7 @@ _NAIVE_LIMIT = 2048 * 2048  # Sq*Skv above this → chunked path
 # Dry-run cost analysis counts lax.scan/map/while bodies ONCE regardless of
 # trip count; under ``unrolled_model()`` every structural loop (layer stacks,
 # attention tiles) unrolls to plain Python so the (small-depth) cost probes
-# in launch/dryrun.py report exact per-layer FLOPs/bytes/collectives.
+# in extras/dryrun.py report exact per-layer FLOPs/bytes/collectives.
 _UNROLL = contextvars.ContextVar("unroll_model", default=False)
 
 

@@ -112,11 +112,12 @@ def mla_decode(
     positions = jnp.full((B, 1), pos, dtype=jnp.int32)
     q_nope, q_rope = _project_q(p, x, cfg, positions)      # (B,1,N,·)
     c_kv_new, k_rope_new = _project_kv_latent(p, x, cfg, positions)
+    zero = np.int32(0)  # match pos's int32: dus indices must share one type
     cache_ckv = jax.lax.dynamic_update_slice(
-        cache_ckv, c_kv_new.astype(cache_ckv.dtype), (0, pos, 0)
+        cache_ckv, c_kv_new.astype(cache_ckv.dtype), (zero, pos, zero)
     )
     cache_kr = jax.lax.dynamic_update_slice(
-        cache_kr, k_rope_new.astype(cache_kr.dtype), (0, pos, 0)
+        cache_kr, k_rope_new.astype(cache_kr.dtype), (zero, pos, zero)
     )
 
     # absorb: q_eff[b,n,l] = q_nope · wk_b — scores in latent space

@@ -13,10 +13,10 @@ SWA archs, latent (c_kv, k_rope) for MLA.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import LMConfig
 from repro.launch.sharding import logical
@@ -319,8 +319,9 @@ def decode_step(
         ck, cv = cache_kv
         h = rms_norm(x, pl["norm_attn"], cfg.norm_eps)
         q, k, v = _gqa_qkv(pl["attn"], h, positions, cfg)
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        zero = np.int32(0)  # match slot's int32: dus indices must share one type
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (zero, slot, zero, zero))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (zero, slot, zero, zero))
         if cfg.decode_kv_blocks > 1 and S_cap % cfg.decode_kv_blocks == 0:
             from repro.models.layers import blocked_decode_attention
 

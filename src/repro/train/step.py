@@ -8,7 +8,6 @@ trick recorded in §Perf).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

@@ -1,6 +1,6 @@
 """Test session config. NOTE: no XLA device-count flags here — smoke tests
 and benches must see exactly one CPU device (the 512-device flag belongs to
-launch/dryrun.py alone). Multi-device tests spawn subprocesses."""
+extras/dryrun.py alone). Multi-device tests spawn subprocesses."""
 import sys
 import pathlib
 

@@ -1,0 +1,115 @@
+"""Retrace detector (staticcheck pass b): unit level and end to end.
+
+End-to-end acceptance: with ``REPRO_CHECK_RETRACE=1``, run + stream +
+re-stream on both engine backends and both CPU kernel backends without a
+single logical cache key tracing twice — `ExecutableCache.get` raises
+`RetraceError` the moment one does, and `assert_no_retrace` additionally
+catches jitted executables that silently re-traced under one key.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import GraphSession
+from repro.core import QueryGraph
+from repro.core.cache import ExecutableCache, RetraceError
+from repro.graphstore import generators
+
+QUERY = QueryGraph.build([0, 1, 2, 3], [(0, 1), (1, 2), (2, 3)])
+
+
+def _graph():
+    return generators.rmat(120, 420, 4, seed=3, symmetrize=True)
+
+
+# ------------------------------------------------------------------ unit
+def test_cache_raises_on_second_trace_of_one_key():
+    cache = ExecutableCache(check_retrace=True)
+    cache.get(("k", 1), lambda: "exe")
+    cache.get(("k", 1), lambda: "exe")  # hit: fine
+    cache.clear()  # dropping executables does not erase trace history
+    with pytest.raises(RetraceError):
+        cache.get(("k", 1), lambda: "exe")
+
+
+def test_cache_records_duplicates_when_not_raising():
+    cache = ExecutableCache(check_retrace=False)
+    cache.get(("k", 1), lambda: "exe")
+    cache.clear()
+    cache.get(("k", 1), lambda: "exe")
+    assert cache.duplicate_traces() == [("k", 1)]
+    with pytest.raises(RetraceError):
+        cache.assert_no_retrace()
+
+
+def test_cache_env_opt_in(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECK_RETRACE", "1")
+    assert ExecutableCache().check_retrace
+    monkeypatch.setenv("REPRO_CHECK_RETRACE", "0")
+    assert not ExecutableCache().check_retrace
+
+
+def test_silent_jit_retrace_under_one_key_is_caught():
+    """A static argument that escapes the cache key: one key, two traces."""
+    cache = ExecutableCache(check_retrace=True)
+    fn = cache.get(("squash",), lambda: jax.jit(lambda x: x * 2))
+    fn(jnp.zeros((4,), jnp.int32))
+    fn(jnp.zeros((8,), jnp.int32))  # new shape -> silent second trace
+    assert cache.retraced_executables()
+    with pytest.raises(RetraceError):
+        cache.assert_no_retrace()
+
+
+def test_recorder_sees_invocations():
+    cache = ExecutableCache()
+    seen = []
+    cache.recorder = lambda key, fn, a, kw: seen.append(key)
+    fn = cache.get(("f",), lambda: (lambda x: x + 1))
+    assert fn(1) == 2
+    fn = cache.get(("f",), lambda: (lambda x: x + 1))  # hit, still wrapped
+    assert fn(2) == 3
+    assert seen == [("f",), ("f",)]
+
+
+# ------------------------------------------------------------ end to end
+@pytest.mark.parametrize("kernels", ["jnp", "pallas-interpret"])
+def test_run_stream_restream_traces_each_key_once(monkeypatch, kernels):
+    if kernels == "pallas-interpret":
+        pytest.importorskip("jax.experimental.pallas")
+    monkeypatch.setenv("REPRO_CHECK_RETRACE", "1")
+    with GraphSession.open(_graph(), kernels=kernels) as s:
+        assert s.cache.check_retrace  # env picked up at session open
+        compiled = s.compile(QUERY, max_matches=0)
+        res = compiled.run(adaptive=False)
+        pages = [p.rows for p in compiled.stream(page_size=16)]
+        misses_after_stream = s.cache.misses
+        re_pages = [p.rows for p in compiled.stream(page_size=16)]
+        # the re-stream built nothing new: every executable was a cache hit
+        assert s.cache.misses == misses_after_stream
+        s.cache.assert_no_retrace()
+    if res.complete:
+        rows = np.concatenate([np.zeros((0, 4), np.int64), *pages])
+        assert rows.shape[0] == res.rows.shape[0]
+        assert [r.tolist() for r in re_pages] == [r.tolist() for r in pages]
+
+
+def test_sharded_run_stream_restream_traces_each_key_once(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECK_RETRACE", "1")
+    with GraphSession.open(_graph(), backend="sharded") as s:
+        compiled = s.compile(QUERY, max_matches=0)
+        compiled.run(adaptive=False)
+        for _ in compiled.stream(page_size=16):
+            pass
+        for _ in compiled.stream(page_size=16):
+            pass
+        s.cache.assert_no_retrace()
+
+
+def test_engine_probe_is_clean():
+    """The staticcheck engine probe (recorder + jaxpr walk) on the cheap
+    combination; the CLI covers the full matrix."""
+    from repro.analysis.staticcheck import engines
+
+    assert engines.probe_engine("local", "jnp") == []

@@ -1,0 +1,296 @@
+"""Seeded-violation suite for `repro.analysis.staticcheck`.
+
+Every rule must (a) fire on a planted violation and (b) stay silent on the
+real repository — a lint that can't catch its own fixture, or that cries
+wolf on the clean tree, gates nothing.
+"""
+import pathlib
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.staticcheck import archlint, cachekeys, contracts, run_all
+from repro.analysis.staticcheck.findings import RULES
+from repro.core import backend as backend_lib
+from repro.core.backend import OpContract
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def _write(root: pathlib.Path, rel: str, body: str) -> None:
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(body))
+
+
+@pytest.fixture()
+def fixture_repo(tmp_path):
+    """A minimal repo skeleton the AST passes can walk."""
+    _write(tmp_path, "src/repro/__init__.py", "")
+    _write(tmp_path, "src/repro/core/__init__.py", "")
+    _write(tmp_path, "tests/test_ok.py", "import repro.core\n")
+    return tmp_path
+
+
+# ------------------------------------------------------------ archlint rules
+def test_bitset_twiddling_planted(fixture_repo):
+    _write(fixture_repo, "src/repro/core/twiddle.py", """\
+        def word_of(i):
+            return i >> 5, i & 31, i % 32
+    """)
+    _write(fixture_repo, "tests/test_ok.py",
+           "import repro.core.twiddle\n")
+    fs = [f for f in archlint.run(str(fixture_repo))
+          if f.rule == "bitset-twiddling"]
+    assert len(fs) == 3 and all("twiddle.py" in f.path for f in fs)
+
+
+def test_bitset_twiddling_allowed_in_kernels_bitset(fixture_repo):
+    _write(fixture_repo, "src/repro/kernels/__init__.py", "")
+    _write(fixture_repo, "src/repro/kernels/bitset/__init__.py", "")
+    _write(fixture_repo, "src/repro/kernels/bitset/impl.py", """\
+        def word_of(i):
+            return i >> 5
+    """)
+    _write(fixture_repo, "tests/test_ok.py",
+           "import repro.kernels.bitset.impl\n")
+    assert not [f for f in archlint.run(str(fixture_repo))
+                if f.rule == "bitset-twiddling"]
+
+
+def test_module_jit_state_planted(fixture_repo):
+    _write(fixture_repo, "src/repro/core/jitstate.py", """\
+        import functools
+        import jax
+
+        @functools.lru_cache(maxsize=None)
+        def build(n):
+            return n
+
+        square = jax.jit(lambda x: x * x)
+    """)
+    _write(fixture_repo, "tests/test_ok.py", "import repro.core.jitstate\n")
+    fs = [f for f in archlint.run(str(fixture_repo))
+          if f.rule == "module-jit-state"]
+    assert len(fs) == 2  # the decorator AND the import-time jit
+
+
+def test_direct_engine_construction_planted(fixture_repo):
+    _write(fixture_repo, "src/repro/core/sneaky.py", """\
+        from repro.core.engine import SubgraphMatcher
+
+        def make(pg):
+            return SubgraphMatcher(pg)
+    """)
+    _write(fixture_repo, "tests/test_ok.py", "import repro.core.sneaky\n")
+    fs = [f for f in archlint.run(str(fixture_repo))
+          if f.rule == "direct-engine-construction"]
+    assert len(fs) == 1 and fs[0].line == 4
+
+
+def test_stream_host_sync_planted(fixture_repo):
+    _write(fixture_repo, "src/repro/core/consumer.py", """\
+        import jax
+
+        def drain(compiled):
+            out = []
+            for page in compiled.stream(page_size=8):
+                out.append(jax.device_get(page.rows))
+            return out
+    """)
+    _write(fixture_repo, "tests/test_ok.py", "import repro.core.consumer\n")
+    fs = [f for f in archlint.run(str(fixture_repo))
+          if f.rule == "stream-host-sync"]
+    assert len(fs) == 1
+
+
+def test_missing_slow_marker_planted(fixture_repo):
+    _write(fixture_repo, "tests/test_spawns.py", """\
+        import subprocess
+
+        def test_heavy():
+            subprocess.run(["true"])
+    """)
+    fs = [f for f in archlint.run(str(fixture_repo))
+          if f.rule == "missing-slow-marker"]
+    assert len(fs) == 1
+    # module-level pytestmark silences it
+    _write(fixture_repo, "tests/test_spawns.py", """\
+        import subprocess
+        import pytest
+
+        pytestmark = pytest.mark.slow
+
+        def test_heavy():
+            subprocess.run(["true"])
+    """)
+    assert not [f for f in archlint.run(str(fixture_repo))
+                if f.rule == "missing-slow-marker"]
+
+
+def test_orphan_module_planted(fixture_repo):
+    _write(fixture_repo, "src/repro/core/dead.py", "VALUE = 1\n")
+    fs = [f for f in archlint.run(str(fixture_repo))
+          if f.rule == "orphan-module"]
+    assert [f.path for f in fs] == ["src/repro/core/dead.py"]
+    # the extras/ quarantine is exempt
+    _write(fixture_repo, "src/repro/extras/__init__.py", "")
+    _write(fixture_repo, "src/repro/extras/dead2.py", "VALUE = 2\n")
+    fs = [f for f in archlint.run(str(fixture_repo))
+          if f.rule == "orphan-module"]
+    assert [f.path for f in fs] == ["src/repro/core/dead.py"]
+
+
+def test_unused_import_planted(fixture_repo):
+    _write(fixture_repo, "src/repro/core/lazy.py", """\
+        import os
+        import sys
+
+        def cwd():
+            return os.getcwd()
+    """)
+    _write(fixture_repo, "tests/test_ok.py", "import repro.core.lazy\n")
+    fs = [f for f in archlint.run(str(fixture_repo))
+          if f.rule == "unused-import"]
+    assert len(fs) == 1 and "`sys`" in fs[0].message
+
+
+def test_suppression_comment_silences_rule(fixture_repo):
+    _write(fixture_repo, "src/repro/core/twiddle.py", """\
+        def word_of(i):
+            return i >> 5  # staticcheck: ignore[bitset-twiddling]
+    """)
+    _write(fixture_repo, "tests/test_ok.py", "import repro.core.twiddle\n")
+    assert not [f for f in archlint.run(str(fixture_repo))
+                if f.rule == "bitset-twiddling"]
+
+
+# ------------------------------------------------------------- cache keys
+def test_cache_key_coverage_planted(fixture_repo):
+    _write(fixture_repo, "src/repro/core/leaky.py", """\
+        import jax
+
+        class Engine:
+            def fn(self, spec, cap):
+                return self.cache.get(
+                    ("match", spec),
+                    lambda: jax.jit(lambda x: x[:cap]),
+                )
+    """)
+    _write(fixture_repo, "tests/test_ok.py", "import repro.core.leaky\n")
+    fs = cachekeys.check_cache_keys(fixture_repo)
+    assert len(fs) == 1 and "'cap'" in fs[0].message
+
+
+def test_cache_key_coverage_assigned_key_and_named_builder(fixture_repo):
+    _write(fixture_repo, "src/repro/core/tight.py", """\
+        import jax
+
+        class Engine:
+            def fn(self, spec, cap):
+                def build():
+                    return jax.jit(lambda x: x[:cap])
+
+                key = ("match", spec, cap)
+                return self.cache.get(key, build)
+    """)
+    _write(fixture_repo, "tests/test_ok.py", "import repro.core.tight\n")
+    assert not cachekeys.check_cache_keys(fixture_repo)
+
+
+# --------------------------------------------------------- jaxpr contracts
+class _FakeKernels:
+    """Minimal stand-in for a `Kernels` backend, one op per test."""
+
+    name = "_staticcheck_test"
+
+    def __init__(self, fn):
+        self._fn = fn
+
+    def op(self, x):
+        return self._fn(x)
+
+
+def _fake_contract(out_dtypes):
+    return OpContract(
+        "op",
+        lambda: ((jax.ShapeDtypeStruct((8,), jnp.int32),), {}),
+        out_dtypes,
+    )
+
+
+def _check_fake(fn, out_dtypes):
+    """Register a throwaway backend, run the contract pass on it alone."""
+    name = _FakeKernels.name
+    backend_lib.register_backend(
+        name, lambda: _FakeKernels(fn), contracts=(_fake_contract(out_dtypes),)
+    )
+    try:
+        return contracts.check_kernel_contracts([name])
+    finally:
+        backend_lib._REGISTRY.pop(name, None)
+        backend_lib._INSTANCES.pop(name, None)
+        backend_lib._CONTRACTS.pop(name, None)
+
+
+def test_jaxpr_out_dtype_planted():
+    fs = _check_fake(lambda x: x.astype(jnp.float32), out_dtypes=("int32",))
+    assert _rules_of(fs) == {"jaxpr-out-dtype"}
+    assert "float32" in fs[0].message
+
+
+def test_jaxpr_out_dtype_trace_failure_is_a_finding():
+    def broken(x):
+        raise TypeError("no abstract trace for you")
+
+    fs = _check_fake(broken, out_dtypes=("int32",))
+    assert _rules_of(fs) == {"jaxpr-out-dtype"}
+    assert "failed to trace" in fs[0].message
+
+
+def test_jaxpr_dtype_width_planted():
+    with jax.experimental.enable_x64():
+        fs = _check_fake(
+            lambda x: x.astype(jnp.float64), out_dtypes=("float64",)
+        )
+    assert _rules_of(fs) == {"jaxpr-dtype-width"}
+
+
+def test_jaxpr_banned_primitive_planted():
+    def leaky(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v), jax.ShapeDtypeStruct((8,), jnp.int32), x
+        )
+
+    fs = _check_fake(leaky, out_dtypes=("int32",))
+    assert "jaxpr-banned-primitive" in _rules_of(fs)
+
+
+def test_real_contracts_trace_clean_on_all_backends():
+    # under ambient x64 restrict to jnp, matching the CLI's --x64 policy
+    # (pallas interpret-mode runs its grid loop in int64 by itself)
+    backends = ["jnp"] if jax.config.jax_enable_x64 else None
+    assert contracts.check_kernel_contracts(backends) == []
+
+
+# ----------------------------------------------------------- clean repo
+def test_static_passes_clean_on_repo():
+    """The repo's own tree carries zero findings (the CI gate); the engine
+    probe is covered separately (`test_retrace.py`) because it executes."""
+    backends = ["jnp"] if jax.config.jax_enable_x64 else None
+    fs = run_all(REPO_ROOT, engines=False, kernel_backends=backends)
+    assert fs == [], "\n".join(str(f) for f in fs)
+
+
+def test_every_rule_has_a_registered_description():
+    assert len(RULES) >= 8
+    for r in RULES.values():
+        assert r.layer and r.description
