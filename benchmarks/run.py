@@ -3,6 +3,11 @@
 ``PYTHONPATH=src python -m benchmarks.run [--fast]``
 prints ``name,us_per_call,derived`` CSV rows.
 
+``--snapshot [PATH]`` additionally writes the rows plus environment
+metadata as JSON (default ``benchmarks/snapshots/BENCH_<date>.json``) —
+the perf trajectory ROADMAP item 4 tracks; CI uploads a fresh snapshot as
+an artifact on every run.
+
  paper artifact                        module
  Table 1 (index linear build/size)    bench_index
  Table 2 (graph loading)              bench_loading
@@ -18,15 +23,54 @@ prints ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 import argparse
+import contextlib
+import datetime
+import io
+import json
+import pathlib
 import sys
 import time
 import traceback
 
 
+def _parse_rows(suite: str, text: str) -> list[dict]:
+    rows = []
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.append({
+            "suite": suite,
+            "name": parts[0],
+            "us_per_call": us,
+            "derived": parts[2] if len(parts) > 2 else "",
+        })
+    return rows
+
+
+def _default_snapshot_path() -> str:
+    stamp = datetime.date.today().isoformat()
+    return str(
+        pathlib.Path(__file__).resolve().parent
+        / "snapshots" / f"BENCH_{stamp}.json"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller graphs")
-    ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated suite names to run")
+    ap.add_argument("--snapshot", nargs="?", const=_default_snapshot_path(),
+                    default=None, metavar="PATH",
+                    help="also write rows + environment metadata as JSON "
+                         "(default benchmarks/snapshots/BENCH_<date>.json)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -70,19 +114,45 @@ def main() -> None:
         jax.clear_caches()
         gc.collect()
 
+    only = set(args.only.split(",")) if args.only else None
+    snapshot_rows: list[dict] = []
     print("name,us_per_call,derived")
     for name, fn in suites.items():
-        if args.only and name != args.only:
+        if only is not None and name not in only:
             continue
         t0 = time.time()
+        buf = io.StringIO()
         try:
-            fn()
+            with contextlib.redirect_stdout(buf):
+                fn()
         except Exception:  # noqa: BLE001 — report, keep the suite running
-            print(f"{name}_FAILED,0.0,", file=sys.stdout)
+            buf.write(f"{name}_FAILED,0.0,\n")
             traceback.print_exc()
+        text = buf.getvalue()
+        sys.stdout.write(text)
+        snapshot_rows.extend(_parse_rows(name, text))
         _gc()
         print(f"# suite {name} took {time.time()-t0:.1f}s", file=sys.stderr)
         sys.stdout.flush()
+
+    if args.snapshot:
+        import jax
+
+        doc = {
+            "created": datetime.datetime.now(
+                datetime.timezone.utc
+            ).isoformat(timespec="seconds"),
+            "fast": args.fast,
+            "only": args.only,
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "rows": snapshot_rows,
+        }
+        path = pathlib.Path(args.snapshot)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"# snapshot -> {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,13 @@
 #!/usr/bin/env bash
 # Run the repo's static analyzer (jaxpr contracts + retrace detector +
-# architecture lint). Exit 1 on any finding. Flags pass through, e.g.:
-#   ./scripts/staticcheck.sh --json          machine-readable report
-#   ./scripts/staticcheck.sh --no-engines    skip the live engine probe
-#   ./scripts/staticcheck.sh --x64           jnp contracts under x64
+# architecture lint + collective safety + cost budgets). Exit 1 on any
+# finding. Flags pass through, e.g.:
+#   ./scripts/staticcheck.sh --json            report incl. cost_report
+#   ./scripts/staticcheck.sh --no-engines      skip the live engine probe
+#                                              (and the trace-driven passes)
+#   ./scripts/staticcheck.sh --no-collectives  skip collective safety
+#   ./scripts/staticcheck.sh --no-costmodel    skip budgets/cost model
+#   ./scripts/staticcheck.sh --x64             jnp contracts under x64
 set -euo pipefail
 cd "$(dirname "$0")/.."
 JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" PYTHONPATH=src \

@@ -1,6 +1,6 @@
 """repro.analysis.staticcheck — the repo's own static analyzer.
 
-Three passes over the matcher (DESIGN.md §5 "Checked invariants"):
+Five passes over the matcher (DESIGN.md §5 "Checked invariants"):
 
   a. jaxpr contract checker (`contracts`, `engines`): every registered
      `Kernels` op and every engine entry point abstractly traced and its
@@ -10,7 +10,15 @@ Three passes over the matcher (DESIGN.md §5 "Checked invariants"):
      `ExecutableCache` key traces exactly once across run/stream/re-stream;
   c. architecture lint (`archlint`): AST rules keeping bit-twiddling,
      module-level jit state, engine construction, and stream consumers
-     where DESIGN.md says they live.
+     where DESIGN.md says they live;
+  d. collective safety (`collective_safety`): every `shard_map` body the
+     sharded engine traced — no collective under shard-divergent control
+     flow, every `ppermute` a bijection over the mesh axis, axis names
+     resolved, head-STwig tables never gathered (Theorem 5);
+  e. static cost model (`costmodel`): per-executable peak resident bytes
+     (liveness), FLOPs, and collective bytes against checked-in ceilings
+     in `src/repro/analysis/budgets.json` — fail-closed on missing rows,
+     linear-in-graph-size memory asserted across two probe scales.
 
 Run as ``python -m repro.analysis.staticcheck [--json]`` (exit 1 on any
 finding) or through the pytest suite (`tests/test_staticcheck.py`).
@@ -26,14 +34,30 @@ from repro.analysis.staticcheck.findings import (  # noqa: F401
     report_json,
 )
 
+# the bigger of the two probe scales for the linear-memory assertion; the
+# cost of the probe grows with it, the discrimination (linear vs quadratic
+# ≈ scale vs scale²) too
+MEMORY_SCALE = 4
+
 
 def run_all(
     repo_root: "pathlib.Path | str | None" = None,
     *,
     engines: bool = True,
     kernel_backends=None,
+    collectives: bool = True,
+    costs: bool = True,
+    reports: "dict | None" = None,
 ) -> "list[Finding]":
-    """All passes; the one-call entry the CLI and the test suite share."""
+    """All passes; the one-call entry the CLI and the test suite share.
+
+    The collective-safety and cost-model passes consume the jaxprs the
+    engine probe records, so ``engines=False`` skips them too. Pass a dict
+    as ``reports`` to receive the machine-readable side reports
+    (``collectives``: per-shard_map collective sequences, ``cost_report``:
+    per-executable estimates + per-target aggregates) — the CLI folds them
+    into ``--json`` output.
+    """
     from repro.analysis.staticcheck import archlint, cachekeys, contracts
     from repro.analysis.staticcheck import engines as engines_mod
 
@@ -43,9 +67,52 @@ def run_all(
 
     findings = list(contracts.check_kernel_contracts(kernel_backends))
     if engines:
-        findings.extend(engines_mod.check_engines(
-            kernels=kernel_backends or engines_mod.KERNEL_BACKENDS,
-        ))
+        probe_kernels = kernel_backends or engines_mod.KERNEL_BACKENDS
+        engine_findings, traces = engines_mod.check_engines_traces(
+            kernels=probe_kernels,
+        )
+        findings.extend(engine_findings)
+        if collectives:
+            from repro.analysis.staticcheck import collective_safety
+
+            shard_reports: list = []
+            findings.extend(collective_safety.check_traces(
+                traces, reports=shard_reports,
+            ))
+            if reports is not None:
+                reports["collectives"] = [
+                    r.to_dict() for r in shard_reports
+                ]
+        if costs:
+            from repro.analysis.staticcheck import costmodel
+
+            estimates = [
+                costmodel.estimate(t.jaxpr, target=t.target) for t in traces
+            ]
+            findings.extend(costmodel.check_budgets(estimates))
+            # linear-memory bound: re-probe a MEMORY_SCALE× graph on the
+            # jnp kernels (pallas-interpret re-runs the same programs —
+            # scaling it would only re-pay the slow interpreter)
+            _, big_traces = engines_mod.check_engines_traces(
+                kernels=("jnp",), scale=MEMORY_SCALE,
+            )
+            big = [
+                costmodel.estimate(t.jaxpr, target=t.target)
+                for t in big_traces
+            ]
+            budgets = costmodel.load_budgets()
+            findings.extend(costmodel.check_linear_memory(
+                estimates, big,
+                size_ratio=float(MEMORY_SCALE),
+                slack=float(budgets.get("linear_slack", 2.0)),
+            ))
+            if reports is not None:
+                reports["cost_report"] = {
+                    "executables": [e.to_dict() for e in estimates],
+                    "aggregates": costmodel.aggregate(estimates),
+                    "memory_scale": MEMORY_SCALE,
+                    "aggregates_scaled": costmodel.aggregate(big),
+                }
     findings.extend(cachekeys.check_cache_keys(repo_root))
     findings.extend(archlint.run(repo_root))
     return findings

@@ -1,6 +1,8 @@
 """CLI: ``python -m repro.analysis.staticcheck [--json] [--no-engines]
-[--x64] [--root DIR]``. Exit status 1 when any finding survives, 0 on a
-clean tree — the CI gate (`.github/workflows/ci.yml` staticcheck job)."""
+[--no-collectives] [--no-costmodel] [--x64] [--root DIR]``. Exit status 1
+when any finding survives, 0 on a clean tree — the CI gate
+(`.github/workflows/ci.yml` staticcheck job). ``--json`` additionally
+carries the collective-sequence and per-executable cost reports."""
 from __future__ import annotations
 
 import argparse
@@ -17,7 +19,15 @@ def main(argv=None) -> int:
                     help="emit the machine-readable report on stdout")
     ap.add_argument("--no-engines", action="store_true",
                     help="skip the live engine probe (pure static + abstract "
-                         "tracing only; seconds instead of a minute)")
+                         "tracing only; seconds instead of a minute) — also "
+                         "skips the trace-driven collective-safety and "
+                         "cost-model passes")
+    ap.add_argument("--no-collectives", action="store_true",
+                    help="skip the collective-safety pass over the sharded "
+                         "engine traces")
+    ap.add_argument("--no-costmodel", action="store_true",
+                    help="skip the static cost model (budgets.json "
+                         "enforcement + linear-memory scaling probe)")
     ap.add_argument("--x64", action="store_true",
                     help="trace kernel contracts and engine probes with jax "
                          "x64 enabled to surface weak-type promotions; "
@@ -35,13 +45,17 @@ def main(argv=None) -> int:
 
     from repro.analysis.staticcheck import report_json, run_all
 
+    reports: dict = {}
     findings = run_all(
         args.root,
         engines=not args.no_engines,
         kernel_backends=("jnp",) if args.x64 else None,
+        collectives=not args.no_collectives,
+        costs=not args.no_costmodel,
+        reports=reports,
     )
     if args.json:
-        print(report_json(findings))
+        print(report_json(findings, extras=reports))
     else:
         for f in findings:
             print(f)

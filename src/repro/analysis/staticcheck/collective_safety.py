@@ -1,0 +1,454 @@
+"""Collective-safety analysis (staticcheck pass d).
+
+The sharded engine's correctness-critical surface is its collective
+structure: the OR-allreduce butterfly, the Theorem-4 load-set fetches
+(all-gather or the distance-bounded ppermute ring), and the Theorem-5
+head-locality rule that keeps per-shard result pages disjoint. This pass
+walks every sharded-engine jaxpr recorded by the `ExecutableCache.recorder`
+probe, finds each `shard_map` equation, extracts its collective sequence,
+and enforces four machine-checked invariants:
+
+  * ``coll-divergent-control``   — no collective under shard-divergent
+    control flow: a `cond`/`while` whose predicate depends on per-shard
+    data (sharded inputs, `axis_index`) may take different branches / trip
+    counts on different shards, and a collective inside it deadlocks the
+    SPMD program (some shards enter the collective, others never do).
+    Values produced by full-axis `psum`/`pmax`/`pmin`/`all_gather` are
+    replicated and therefore convergent predicates.
+  * ``coll-ppermute-bijection``  — every `ppermute` permutation is a
+    bijection over the mesh axis: each shard sends exactly once and
+    receives exactly once. The ring fetch in
+    `repro.core.collectives.gather_load_set_ring` is the riskiest
+    construction — a missing (src, dst) pair silently zero-fills a
+    neighbour's STwig table instead of failing.
+  * ``coll-axis-name``           — collective axis names resolve against
+    the enclosing `shard_map` mesh AND against the engine's declared axis
+    set (`repro.core.dist.AXIS`); a stray axis name is a latent trace
+    error that only fires on a differently-shaped mesh.
+  * ``coll-head-gather``         — Theorem 5 as a static invariant: the
+    head-STwig table is never an operand of any gather collective
+    (`all_gather` / `ppermute` / `all_to_all`). Head rows staying local is
+    what makes per-shard pages provably disjoint; fetching the head
+    remotely would re-introduce cross-shard duplicates. Head operands are
+    identified positionally from the executable-cache key
+    (`head_taints_for_key`) and taint-propagated through the body.
+
+Everything here is jaxpr-walking — nothing executes, so the pass adds
+milliseconds on top of the engine probe that recorded the traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+from repro.analysis.staticcheck.findings import Finding, rule
+
+rule("coll-divergent-control", "collectives",
+     "collective nested under a cond/while whose predicate depends on "
+     "per-shard data (static SPMD deadlock hazard)")
+rule("coll-ppermute-bijection", "collectives",
+     "ppermute permutation is not a bijection over the mesh axis")
+rule("coll-axis-name", "collectives",
+     "collective axis name absent from the enclosing shard_map mesh or "
+     "from the engine's declared axis set")
+rule("coll-head-gather", "collectives",
+     "head-STwig table flows into a gather collective (Theorem 5: the "
+     "head is never fetched remotely — that is what keeps per-shard "
+     "pages disjoint)")
+
+# Every cross-shard primitive we track. `psum`/`pmax`/`pmin` produce
+# replicated (convergent) outputs over the full axis; gather-shaped ones
+# move table data between shards.
+REDUCE_COLLECTIVES = ("psum", "pmax", "pmin")
+GATHER_COLLECTIVES = ("all_gather", "ppermute", "all_to_all")
+COLLECTIVE_PRIMS = frozenset(REDUCE_COLLECTIVES + GATHER_COLLECTIVES + (
+    "psum_invariant", "reduce_scatter", "pgather", "axis_index",
+)) - {"axis_index"}
+
+# Primitives with their own sub-jaxprs the analyzer recurses into as plain
+# straight-line code (divergence/taint map input-position → input-position).
+_INLINE_CALL_PRIMS = (
+    "pjit", "closed_call", "core_call", "custom_jvp_call",
+    "custom_vjp_call", "custom_vjp_call_jaxpr", "remat", "checkpoint",
+)
+
+
+def _jaxpr_of(obj):
+    inner = getattr(obj, "jaxpr", None)
+    if inner is not None and hasattr(inner, "eqns"):
+        return inner
+    return obj if hasattr(obj, "eqns") else None
+
+
+def _axis_names(params: dict) -> tuple:
+    """Axis names of a collective eqn: `axes` (psum/pmax/pmin) or
+    `axis_name` (ppermute/all_gather/all_to_all); positional int axes are
+    array axes, not mesh axes, and are skipped."""
+    raw = params.get("axes", params.get("axis_name", ()))
+    if not isinstance(raw, (tuple, list)):
+        raw = (raw,)
+    return tuple(a for a in raw if isinstance(a, str))
+
+
+def _is_var(v) -> bool:
+    return hasattr(v, "aval") and not hasattr(v, "val")
+
+
+@dataclasses.dataclass
+class ShardMapReport:
+    """One shard_map equation's extracted collective structure."""
+
+    target: str
+    mesh_axes: dict          # axis name -> size
+    collectives: list        # primitive names, program order
+
+    def to_dict(self) -> dict:
+        return {
+            "target": self.target,
+            "mesh_axes": dict(self.mesh_axes),
+            "collectives": list(self.collectives),
+        }
+
+
+class _BodyChecker:
+    """Divergence + head-taint walk over one shard_map body jaxpr."""
+
+    def __init__(self, target: str, mesh_axes: dict, allowed_axes, findings,
+                 collectives):
+        self.target = target
+        self.mesh_axes = mesh_axes
+        self.allowed_axes = frozenset(allowed_axes) if allowed_axes else None
+        self.findings = findings
+        self.collectives = collectives
+        self._seen_rules: set[tuple[str, str]] = set()
+
+    # ------------------------------------------------------------- plumbing
+    def _emit(self, rule_id: str, message: str, dedup: str = "") -> None:
+        key = (rule_id, dedup or message)
+        if key in self._seen_rules:
+            return
+        self._seen_rules.add(key)
+        self.findings.append(Finding(rule_id, self.target, 0, message))
+
+    @staticmethod
+    def _in_set(vals, marked: set) -> bool:
+        return any(_is_var(v) and v in marked for v in vals)
+
+    # ------------------------------------------------------- per-collective
+    def _check_collective(self, eqn, divergent: set, tainted: set,
+                          under_divergent_ctl: bool) -> None:
+        prim = eqn.primitive.name
+        self.collectives.append(prim)
+        if under_divergent_ctl:
+            self._emit(
+                "coll-divergent-control",
+                f"`{prim}` executes under shard-divergent control flow — "
+                "shards disagreeing on the branch/trip count deadlock the "
+                "collective",
+                dedup=prim,
+            )
+        names = _axis_names(eqn.params)
+        for name in names:
+            if name not in self.mesh_axes:
+                self._emit(
+                    "coll-axis-name",
+                    f"`{prim}` over axis {name!r} which is not an axis of "
+                    f"the enclosing shard_map mesh {sorted(self.mesh_axes)}",
+                    dedup=f"{prim}:{name}:mesh",
+                )
+            elif self.allowed_axes is not None and name not in self.allowed_axes:
+                self._emit(
+                    "coll-axis-name",
+                    f"`{prim}` over axis {name!r} outside the engine's "
+                    f"declared axis set {sorted(self.allowed_axes)}",
+                    dedup=f"{prim}:{name}:allowed",
+                )
+        if prim == "ppermute":
+            self._check_ppermute(eqn, names)
+        if prim in GATHER_COLLECTIVES and self._in_set(eqn.invars, tainted):
+            self._emit(
+                "coll-head-gather",
+                f"head-STwig table reaches `{prim}` — Theorem 5 requires "
+                "the head to stay shard-local (remote head rows break "
+                "per-shard page disjointness)",
+                dedup=prim,
+            )
+
+    def _check_ppermute(self, eqn, names) -> None:
+        perm = tuple(eqn.params.get("perm", ()))
+        sizes = [self.mesh_axes[n] for n in names if n in self.mesh_axes]
+        if not sizes:
+            return
+        n = sizes[0]
+        srcs = [s for s, _ in perm]
+        dsts = [d for _, d in perm]
+        ok = (
+            len(perm) == n
+            and sorted(srcs) == list(range(n))
+            and sorted(dsts) == list(range(n))
+        )
+        if not ok:
+            self._emit(
+                "coll-ppermute-bijection",
+                f"perm {perm!r} is not a bijection over the {n}-shard mesh "
+                "axis — every shard must send exactly once and receive "
+                "exactly once (missing pairs silently zero-fill the "
+                "destination)",
+                dedup=repr(perm),
+            )
+
+    # ------------------------------------------------------------ the walk
+    def walk(self, jaxpr, divergent: set, tainted: set,
+             under_divergent_ctl: bool = False) -> tuple[set, set]:
+        """Walk one (sub-)jaxpr given the divergence/taint of its invars;
+        returns (divergent outvars, tainted outvars) as var sets."""
+        j = _jaxpr_of(jaxpr)
+        if j is None:
+            return set(), set()
+        div = set(divergent)
+        tnt = set(tainted)
+        for eqn in j.eqns:
+            prim = eqn.primitive.name
+            in_div = self._in_set(eqn.invars, div)
+            in_tnt = self._in_set(eqn.invars, tnt)
+
+            if prim in COLLECTIVE_PRIMS:
+                self._check_collective(eqn, div, tnt, under_divergent_ctl)
+                # full-axis reductions/gathers produce replicated values;
+                # grouped variants and ppermute stay per-shard
+                grouped = eqn.params.get("axis_index_groups") is not None
+                converges = (
+                    prim in REDUCE_COLLECTIVES + ("all_gather",)
+                    and not grouped
+                )
+                out_div = in_div and not converges
+                out_tnt = in_tnt
+            elif prim == "axis_index":
+                out_div, out_tnt = True, False
+            elif prim == "cond":
+                out_div, out_tnt = self._walk_cond(
+                    eqn, div, tnt, under_divergent_ctl
+                )
+            elif prim == "while":
+                out_div, out_tnt = self._walk_while(
+                    eqn, div, tnt, under_divergent_ctl
+                )
+            elif prim == "scan":
+                # static trip count: every shard runs the same number of
+                # iterations, so the loop itself cannot diverge
+                out_div, out_tnt = self._walk_mapped_sub(
+                    eqn, "jaxpr", div, tnt, under_divergent_ctl
+                )
+            elif prim in _INLINE_CALL_PRIMS or "jaxpr" in eqn.params:
+                out_div, out_tnt = self._walk_mapped_sub(
+                    eqn, "jaxpr", div, tnt, under_divergent_ctl
+                )
+            else:
+                out_div, out_tnt = in_div, in_tnt
+
+            for v in eqn.outvars:
+                if not _is_var(v):
+                    continue
+                if out_div:
+                    div.add(v)
+                if out_tnt:
+                    tnt.add(v)
+        out_div_set = {v for v in j.outvars if _is_var(v) and v in div}
+        out_tnt_set = {v for v in j.outvars if _is_var(v) and v in tnt}
+        return out_div_set, out_tnt_set
+
+    def _map_into(self, sub_jaxpr, eqn_invars, div, tnt):
+        """Positional divergence/taint mapping from eqn invars to sub-jaxpr
+        invars (trailing eqn invars map to trailing sub invars)."""
+        j = _jaxpr_of(sub_jaxpr)
+        sub_div, sub_tnt = set(), set()
+        if j is None:
+            return sub_div, sub_tnt
+        n = min(len(j.invars), len(eqn_invars))
+        outer = list(eqn_invars)[-n:]
+        inner = list(j.invars)[-n:]
+        for o, i in zip(outer, inner):
+            if _is_var(o) and o in div:
+                sub_div.add(i)
+            if _is_var(o) and o in tnt:
+                sub_tnt.add(i)
+        return sub_div, sub_tnt
+
+    def _walk_mapped_sub(self, eqn, param, div, tnt, under):
+        subs = eqn.params.get(param)
+        if subs is None:
+            subs = [v for v in eqn.params.values() if _jaxpr_of(v) is not None]
+        if not isinstance(subs, (tuple, list)):
+            subs = [subs]
+        any_div = any_tnt = False
+        for sub in subs:
+            sub_div, sub_tnt = self._map_into(sub, eqn.invars, div, tnt)
+            o_div, o_tnt = self.walk(sub, sub_div, sub_tnt, under)
+            any_div |= bool(o_div) or self._in_set(eqn.invars, div)
+            any_tnt |= bool(o_tnt) or self._in_set(eqn.invars, tnt)
+        return any_div, any_tnt
+
+    def _walk_cond(self, eqn, div, tnt, under):
+        pred = eqn.invars[0]
+        pred_div = _is_var(pred) and pred in div
+        branches = eqn.params.get("branches", ())
+        any_div = self._in_set(eqn.invars, div)
+        any_tnt = self._in_set(eqn.invars, tnt)
+        for br in branches:
+            sub_div, sub_tnt = self._map_into(br, eqn.invars[1:], div, tnt)
+            o_div, o_tnt = self.walk(
+                br, sub_div, sub_tnt, under or pred_div
+            )
+            any_div |= bool(o_div)
+            any_tnt |= bool(o_tnt)
+        return any_div or pred_div, any_tnt
+
+    def _walk_while(self, eqn, div, tnt, under):
+        cond_jaxpr = eqn.params["cond_jaxpr"]
+        body_jaxpr = eqn.params["body_jaxpr"]
+        cn = eqn.params.get("cond_nconsts", 0)
+        bn = eqn.params.get("body_nconsts", 0)
+        cond_consts = eqn.invars[:cn]
+        body_consts = eqn.invars[cn:cn + bn]
+        carry = eqn.invars[cn + bn:]
+        # the predicate reads cond consts + the carry; divergence of either
+        # makes the trip count shard-dependent
+        pred_div = self._in_set(list(cond_consts) + list(carry), div)
+        # check the cond jaxpr itself (a collective inside the predicate
+        # body is legal only when convergent, same walk applies)
+        c_div, _ = self._map_into(
+            cond_jaxpr, list(cond_consts) + list(carry), div, tnt
+        )
+        self.walk(cond_jaxpr, c_div, set(), under or pred_div)
+        b_div, b_tnt = self._map_into(
+            body_jaxpr, list(body_consts) + list(carry), div, tnt
+        )
+        o_div, o_tnt = self.walk(
+            body_jaxpr, b_div, b_tnt, under or pred_div
+        )
+        any_div = pred_div or bool(o_div) or self._in_set(eqn.invars, div)
+        any_tnt = bool(o_tnt) or self._in_set(eqn.invars, tnt)
+        return any_div, any_tnt
+
+
+def _iter_shard_maps(jaxpr):
+    """Yield every shard_map eqn in ``jaxpr`` (recursing through wrappers)."""
+    j = _jaxpr_of(jaxpr)
+    if j is None:
+        return
+    for eqn in j.eqns:
+        if eqn.primitive.name == "shard_map":
+            yield eqn
+            continue
+        for v in eqn.params.values():
+            stack = [v]
+            while stack:
+                x = stack.pop()
+                if isinstance(x, (tuple, list)):
+                    stack.extend(x)
+                    continue
+                sub = _jaxpr_of(x)
+                if sub is not None:
+                    yield from _iter_shard_maps(sub)
+
+
+def _mesh_axes(eqn) -> dict:
+    mesh = eqn.params.get("mesh")
+    shape = getattr(mesh, "shape", None)
+    return dict(shape) if shape else {}
+
+
+def check_collective_safety(
+    jaxpr,
+    target: str,
+    *,
+    allowed_axes: Iterable[str] | None = None,
+    head_invars: Sequence[int] = (),
+    reports: list | None = None,
+) -> list[Finding]:
+    """Walk one traced entry point. ``head_invars`` are the positions of the
+    head-STwig table in each shard_map body's flattened invars (Theorem-5
+    taint sources); ``allowed_axes`` is the engine's declared axis set."""
+    findings: list[Finding] = []
+    for eqn in _iter_shard_maps(jaxpr):
+        body = _jaxpr_of(eqn.params.get("jaxpr"))
+        if body is None:  # pragma: no cover - jax internals moved
+            continue
+        mesh_axes = _mesh_axes(eqn)
+        in_names = eqn.params.get("in_names", ())
+        divergent = set()
+        for i, v in enumerate(body.invars):
+            names = in_names[i] if i < len(in_names) else {"sharded": 1}
+            if names:  # any named axis entry ⇒ per-shard data
+                divergent.add(v)
+        tainted = {
+            body.invars[i] for i in head_invars if i < len(body.invars)
+        }
+        collectives: list[str] = []
+        checker = _BodyChecker(
+            target, mesh_axes, allowed_axes, findings, collectives
+        )
+        checker.walk(body, divergent, tainted)
+        if reports is not None:
+            reports.append(
+                ShardMapReport(target, mesh_axes, collectives)
+            )
+    return findings
+
+
+# ----------------------------------------------------- engine-key plumbing
+def head_taints_for_key(key) -> tuple[int, ...]:
+    """Positions of the head-STwig table in the shard_map body invars of a
+    recorded sharded-engine executable, derived from its cache key.
+
+    The sharded engine flattens its shard_map arguments in declaration
+    order (`repro.core.dist`):
+
+      * ``dist_join``        — body(tables, valids, load): head at
+        ``head_pos`` (key[3]) and ``n + head_pos`` with n = len(schemas);
+      * ``dist_gather``      — body(tables, valids, load): head at
+        ``head_pos`` (key[2]) and ``n + head_pos`` with n = key[1];
+      * ``dist_join_block``  — body(head_cols, head_valid, g_cols,
+        g_valids, lo): head at 0 and 1;
+      * everything else      — no head operand.
+    """
+    if not (isinstance(key, tuple) and key and isinstance(key[0], str)):
+        return ()
+    head = key[0]
+    try:
+        if head == "dist_join":
+            n = len(key[1])
+            pos = int(key[3])
+            return (pos, n + pos)
+        if head == "dist_gather":
+            n = int(key[1])
+            pos = int(key[2])
+            return (pos, n + pos)
+        if head == "dist_join_block":
+            return (0, 1)
+    except (IndexError, TypeError, ValueError):  # pragma: no cover
+        return ()
+    return ()
+
+
+def check_traces(
+    traces,
+    *,
+    allowed_axes: Iterable[str] | None = None,
+    reports: list | None = None,
+) -> list[Finding]:
+    """Run the pass over engine-probe traces (`engines.EntryTrace`)."""
+    if allowed_axes is None:
+        from repro.core.dist import AXIS
+
+        allowed_axes = (AXIS,)
+    findings: list[Finding] = []
+    for t in traces:
+        findings.extend(check_collective_safety(
+            t.jaxpr,
+            t.target,
+            allowed_axes=allowed_axes,
+            head_invars=head_taints_for_key(t.key),
+            reports=reports,
+        ))
+    return findings

@@ -1,0 +1,445 @@
+"""Static cost model (staticcheck pass e).
+
+For every executable the engine probe recorded, estimate — from the jaxpr
+alone, nothing executes —
+
+  * ``peak_bytes``        — peak resident buffer bytes via a liveness scan
+    (a var is live from its defining equation to its last use; sub-jaxprs
+    contribute their own internal peak at their call site);
+  * ``flops``             — total floating/integer op count from a
+    per-primitive table (dot_general counted exactly, elementwise ops at
+    one per output element, sorts at n·log2 n);
+  * ``collective_bytes``  — bytes moved by cross-shard collectives, using
+    the SAME conventions as `repro.analysis.roofline.parse_collectives`
+    (result-shape bytes × ring multiplier: all-reduce 2(n−1)/n,
+    all-gather/reduce-scatter (n−1)/n, permute 1×), so the two estimates
+    cross-check against each other within tolerance on real kernels.
+
+The per-entry-point report is emitted under ``cost_report`` in the CLI's
+``--json`` output and enforced against `src/repro/analysis/budgets.json`:
+
+  * ``cost-budget-exceeded``     — an entry point's estimate exceeds its
+    checked-in ceiling for the fixed probe workload (a perf/memory
+    regression CI refuses);
+  * ``cost-budget-missing``      — an entry point with no budget row fails
+    CLOSED: new collectives/entry points must declare their budget;
+  * ``cost-superlinear-memory``  — the paper's core constraint: peak
+    resident bytes must stay linear in graph size. The probe runs two
+    generator sizes and the per-entry-point growth ratio must stay under
+    ``linear_slack × size_ratio`` (slack absorbs power-of-two capacity
+    rounding, which alone can double a linear quantity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import pathlib
+
+from repro.analysis.staticcheck.findings import Finding, rule
+
+rule("cost-budget-exceeded", "costmodel",
+     "entry-point cost estimate exceeds its budgets.json ceiling for the "
+     "probe workload")
+rule("cost-budget-missing", "costmodel",
+     "entry point has no budgets.json row (the cost pass fails closed: "
+     "new entry points must declare budgets)")
+rule("cost-superlinear-memory", "costmodel",
+     "peak resident bytes grow superlinearly in graph size across the two "
+     "probe generator sizes (the paper's linear-space constraint)")
+
+BUDGETS_PATH = pathlib.Path(__file__).resolve().parents[1] / "budgets.json"
+
+_DTYPE_BYTES = {
+    "bool": 1, "int8": 1, "uint8": 1, "int16": 2, "uint16": 2,
+    "bfloat16": 2, "float16": 2, "int32": 4, "uint32": 4, "float32": 4,
+    "int64": 8, "uint64": 8, "float64": 8, "complex64": 8, "complex128": 16,
+}
+
+# one-flop-per-output-element primitives (elementwise arithmetic & compares)
+_ELEMENTWISE = frozenset({
+    "add", "sub", "mul", "div", "rem", "max", "min", "pow", "integer_pow",
+    "exp", "log", "tanh", "logistic", "sqrt", "rsqrt", "abs", "neg", "sign",
+    "floor", "ceil", "round", "erf", "and", "or", "xor", "not",
+    "shift_left", "shift_right_logical", "shift_right_arithmetic",
+    "eq", "ne", "lt", "le", "gt", "ge", "select_n", "clamp", "nextafter",
+    "convert_element_type", "cumsum", "cummax", "cummin", "cumprod",
+    "population_count", "clz", "add_any",
+})
+
+# one-flop-per-INPUT-element reductions
+_REDUCTIONS = frozenset({
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "reduce_xor", "argmax", "argmin", "reduce_precision",
+})
+
+# jaxpr collective primitive -> HLO kind used by roofline.parse_collectives
+_COLL_KIND = {
+    "psum": "all-reduce",
+    "pmax": "all-reduce",
+    "pmin": "all-reduce",
+    "all_gather": "all-gather",
+    "reduce_scatter": "reduce-scatter",
+    "all_to_all": "all-to-all",
+    "ppermute": "collective-permute",
+}
+
+
+def _jaxpr_of(obj):
+    inner = getattr(obj, "jaxpr", None)
+    if inner is not None and hasattr(inner, "eqns"):
+        return inner
+    return obj if hasattr(obj, "eqns") else None
+
+
+def _is_var(v) -> bool:
+    return hasattr(v, "aval") and not hasattr(v, "val")
+
+
+def _aval_bytes(v) -> int:
+    aval = getattr(v, "aval", None)
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    n = 1
+    for d in shape:
+        try:
+            n *= int(d)
+        except TypeError:  # symbolic dim
+            return 0
+    return n * _DTYPE_BYTES.get(str(dtype), 4)
+
+
+def _nelems(v) -> int:
+    aval = getattr(v, "aval", None)
+    shape = getattr(aval, "shape", ())
+    n = 1
+    for d in shape:
+        try:
+            n *= int(d)
+        except TypeError:
+            return 0
+    return n
+
+
+def _sub_jaxprs(eqn):
+    for v in eqn.params.values():
+        stack = [v]
+        while stack:
+            x = stack.pop()
+            if isinstance(x, (tuple, list)):
+                stack.extend(x)
+                continue
+            j = _jaxpr_of(x)
+            if j is not None:
+                yield j
+
+
+def _scan_length(eqn) -> int:
+    return max(int(eqn.params.get("length", 1)), 1)
+
+
+# ------------------------------------------------------------------- flops
+def _dot_general_flops(eqn) -> float:
+    (lhs_c, _), _ = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0]
+    contract = 1
+    shape = getattr(lhs.aval, "shape", ())
+    for d in lhs_c:
+        contract *= int(shape[d])
+    out = _nelems(eqn.outvars[0])
+    return 2.0 * out * contract
+
+
+def eqn_flops(eqn) -> float:
+    """FLOPs of one equation, excluding sub-jaxpr bodies (those are walked
+    separately so loop trip counts can scale them)."""
+    prim = eqn.primitive.name
+    if prim == "dot_general":
+        return _dot_general_flops(eqn)
+    if prim in _ELEMENTWISE:
+        return float(_nelems(eqn.outvars[0]))
+    if prim in _REDUCTIONS:
+        return float(_nelems(eqn.invars[0]))
+    if prim == "sort":
+        n = _nelems(eqn.invars[0])
+        return float(n) * max(math.log2(max(n, 2)), 1.0)
+    return 0.0
+
+
+def jaxpr_flops(jaxpr) -> float:
+    """Total FLOPs: own equations + sub-jaxprs (scan bodies × trip count;
+    cond branches at the max — one branch executes, bound by the worst)."""
+    j = _jaxpr_of(jaxpr)
+    if j is None:
+        return 0.0
+    total = 0.0
+    for eqn in j.eqns:
+        total += eqn_flops(eqn)
+        prim = eqn.primitive.name
+        if prim == "cond":
+            branches = eqn.params.get("branches", ())
+            total += max((jaxpr_flops(b) for b in branches), default=0.0)
+        elif prim == "scan":
+            total += _scan_length(eqn) * jaxpr_flops(eqn.params["jaxpr"])
+        elif prim == "while":
+            # trip count is data-dependent; count one iteration (a floor —
+            # budgets bound the static program, not the dynamic schedule)
+            total += jaxpr_flops(eqn.params["cond_jaxpr"])
+            total += jaxpr_flops(eqn.params["body_jaxpr"])
+        else:
+            for sub in _sub_jaxprs(eqn):
+                total += jaxpr_flops(sub)
+    return total
+
+
+# --------------------------------------------------------------- liveness
+def peak_bytes(jaxpr) -> float:
+    """Peak resident buffer bytes by forward liveness scan.
+
+    A var is resident from the equation that defines it (jaxpr inputs and
+    constants from the start) until its last use; at each equation the
+    resident set plus the equation's outputs plus the larger of its
+    sub-jaxprs' internal peaks bounds the high-water mark. An estimate —
+    XLA fuses and rematerializes — but a stable, order-preserving one: a
+    program that materializes an O(n²) intermediate shows an O(n²) peak.
+    """
+    j = _jaxpr_of(jaxpr)
+    if j is None:
+        return 0.0
+    last_use: dict = {}
+    for i, eqn in enumerate(j.eqns):
+        for v in eqn.invars:
+            if _is_var(v):
+                last_use[v] = i
+    n_eqns = len(j.eqns)
+    for v in j.outvars:
+        if _is_var(v):
+            last_use[v] = n_eqns
+    live: dict = {}
+    for v in tuple(j.invars) + tuple(getattr(j, "constvars", ())):
+        if _is_var(v) and v in last_use:
+            live[v] = _aval_bytes(v)
+    resident = float(sum(live.values()))
+    peak = resident
+    for i, eqn in enumerate(j.eqns):
+        out_bytes = sum(
+            _aval_bytes(v) for v in eqn.outvars if _is_var(v)
+        )
+        inner = 0.0
+        for sub in _sub_jaxprs(eqn):
+            sub_peak = peak_bytes(sub)
+            sub_io = sum(
+                _aval_bytes(v)
+                for v in tuple(_jaxpr_of(sub).invars)
+                + tuple(_jaxpr_of(sub).outvars)
+            )
+            inner = max(inner, sub_peak - sub_io)
+        peak = max(peak, resident + out_bytes + max(inner, 0.0))
+        for v in eqn.outvars:
+            if _is_var(v) and v in last_use and last_use[v] > i:
+                live[v] = _aval_bytes(v)
+                resident += live[v]
+        for v in tuple(eqn.invars) + tuple(eqn.outvars):
+            if _is_var(v) and last_use.get(v) == i and v in live:
+                resident -= live.pop(v)
+    return peak
+
+
+# ------------------------------------------------------------- collectives
+def collective_bytes(jaxpr, axis_sizes: dict | None = None) -> dict:
+    """Bytes moved per HLO collective kind, roofline conventions (result
+    bytes × ring multiplier). ``axis_sizes`` maps mesh axis name → size for
+    collectives whose eqn carries no explicit size; shard_map meshes found
+    during the walk override it."""
+    out: dict[str, float] = {}
+
+    def walk(jx, sizes):
+        j = _jaxpr_of(jx)
+        if j is None:
+            return
+        for eqn in j.eqns:
+            prim = eqn.primitive.name
+            if prim == "shard_map":
+                mesh = eqn.params.get("mesh")
+                sub_sizes = dict(getattr(mesh, "shape", {}) or sizes)
+                walk(eqn.params.get("jaxpr"), sub_sizes)
+                continue
+            if prim in _COLL_KIND:
+                kind = _COLL_KIND[prim]
+                raw = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+                if not isinstance(raw, (tuple, list)):
+                    raw = (raw,)
+                names = [a for a in raw if isinstance(a, str)]
+                n = 1
+                for a in names:
+                    n *= int(sizes.get(a, 1))
+                if prim == "all_gather":
+                    n = int(eqn.params.get("axis_size", n))
+                ring = (n - 1) / max(n, 1)
+                mult = {
+                    "all-reduce": 2.0 * ring,
+                    "all-gather": ring,
+                    "reduce-scatter": ring,
+                    "all-to-all": ring,
+                    "collective-permute": 1.0,
+                }[kind]
+                b = sum(_aval_bytes(v) for v in eqn.outvars) * mult
+                out[kind] = out.get(kind, 0.0) + b
+            for sub in _sub_jaxprs(eqn):
+                walk(sub, sizes)
+
+    walk(jaxpr, dict(axis_sizes or {}))
+    return out
+
+
+# ---------------------------------------------------------------- estimate
+@dataclasses.dataclass
+class CostEstimate:
+    target: str          # engine:<backend>:<kernels>:<key head>
+    peak_bytes: float
+    flops: float
+    collective_bytes: float
+    collective_by_kind: dict
+
+    def to_dict(self) -> dict:
+        return {
+            "target": self.target,
+            "peak_bytes": self.peak_bytes,
+            "flops": self.flops,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_kind": dict(self.collective_by_kind),
+        }
+
+
+def estimate(jaxpr, target: str = "") -> CostEstimate:
+    by_kind = collective_bytes(jaxpr)
+    return CostEstimate(
+        target=target,
+        peak_bytes=peak_bytes(jaxpr),
+        flops=jaxpr_flops(jaxpr),
+        collective_bytes=float(sum(by_kind.values())),
+        collective_by_kind=by_kind,
+    )
+
+
+# ----------------------------------------------------------------- budgets
+def load_budgets(path: "pathlib.Path | str | None" = None) -> dict:
+    p = pathlib.Path(path) if path is not None else BUDGETS_PATH
+    return json.loads(p.read_text())
+
+
+def _budget_rel(path: "pathlib.Path | str | None") -> str:
+    p = pathlib.Path(path) if path is not None else BUDGETS_PATH
+    return f"src/repro/analysis/{p.name}"
+
+
+def aggregate(estimates: "list[CostEstimate]") -> dict:
+    """target → per-metric max across that target's executables."""
+    worst: dict[str, dict] = {}
+    for e in estimates:
+        m = worst.setdefault(e.target, {
+            "peak_bytes": 0.0, "flops": 0.0, "collective_bytes": 0.0,
+        })
+        m["peak_bytes"] = max(m["peak_bytes"], e.peak_bytes)
+        m["flops"] = max(m["flops"], e.flops)
+        m["collective_bytes"] = max(m["collective_bytes"], e.collective_bytes)
+    return worst
+
+
+def check_budgets(
+    estimates: "list[CostEstimate]",
+    budgets: dict | None = None,
+    *,
+    budgets_path: "pathlib.Path | str | None" = None,
+) -> list[Finding]:
+    """Enforce per-entry-point ceilings. Aggregation is a per-metric max
+    over executables sharing one target (retries and block variants re-key
+    the same entry point)."""
+    if budgets is None:
+        budgets = load_budgets(budgets_path)
+    rel = _budget_rel(budgets_path)
+    entries = budgets.get("entries", {})
+    findings: list[Finding] = []
+    worst = aggregate(estimates)
+    for target, metrics in sorted(worst.items()):
+        row = entries.get(target)
+        if row is None:
+            findings.append(Finding(
+                "cost-budget-missing", target, 0,
+                f"no budget row for this entry point in {rel} — the cost "
+                "pass fails closed; add a ceiling for the probe workload",
+            ))
+            continue
+        for metric, value in sorted(metrics.items()):
+            ceiling = row.get(metric)
+            if ceiling is not None and value > ceiling:
+                findings.append(Finding(
+                    "cost-budget-exceeded", target, 0,
+                    f"{metric} {value:.3g} exceeds the checked-in ceiling "
+                    f"{ceiling:.3g} ({rel}) — a cost regression on the "
+                    "probe workload",
+                ))
+    return findings
+
+
+def check_linear_memory(
+    small: "list[CostEstimate]",
+    big: "list[CostEstimate]",
+    *,
+    size_ratio: float,
+    slack: float = 2.0,
+) -> list[Finding]:
+    """The paper's linear-space constraint, asserted across two generator
+    sizes: per entry point, peak bytes at the bigger graph must stay within
+    ``slack × size_ratio ×`` the smaller graph's peak. ``slack`` absorbs
+    power-of-two capacity rounding (each rounded capacity can at most
+    double a linear term); a quadratic structure shows ratio ≈ size_ratio²
+    and fails for any size_ratio > slack."""
+    findings: list[Finding] = []
+    small_by = aggregate(small)
+    big_by = aggregate(big)
+    bound = slack * size_ratio
+    for target, metrics in sorted(big_by.items()):
+        base = small_by.get(target, {}).get("peak_bytes", 0.0)
+        if base <= 0:
+            continue
+        ratio = metrics["peak_bytes"] / base
+        if ratio > bound:
+            findings.append(Finding(
+                "cost-superlinear-memory", target, 0,
+                f"peak bytes grew {ratio:.2f}x for a {size_ratio:.0f}x "
+                f"graph (bound {bound:.1f}x) — resident memory must stay "
+                "linear in graph size (PAPER.md core constraint)",
+            ))
+    return findings
+
+
+# -------------------------------------------------------------- cross-check
+def hlo_cross_check(fn, *args, n_devices: int | None = None) -> dict:
+    """Compare this module's jaxpr estimates against the HLO-derived numbers
+    `repro.analysis.roofline` uses: XLA's ``cost_analysis()`` FLOPs and
+    `parse_collectives` over the optimized HLO text. Returns both sides;
+    the test suite asserts agreement within 10% on the benchmarked kernels.
+    """
+    import jax
+
+    from repro.analysis import roofline
+
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    est = estimate(jax.make_jaxpr(jitted)(*args))
+    compiled = jitted.lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # pragma: no cover - older jax returns a list
+        ca = ca[0]
+    n = n_devices if n_devices is not None else jax.device_count()
+    hlo_coll = roofline.parse_collectives(compiled.as_text(), n)
+    return {
+        "est_flops": est.flops,
+        "hlo_flops": float(ca.get("flops", 0.0)),
+        "est_collective_bytes": est.collective_bytes,
+        "hlo_collective_bytes": hlo_coll.total_bytes,
+        "est_by_kind": est.collective_by_kind,
+        "hlo_by_kind": hlo_coll.bytes_by_kind,
+    }

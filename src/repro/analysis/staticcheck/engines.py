@@ -19,6 +19,8 @@ the graph is ~100 nodes and every capacity is tiny.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from repro.analysis.staticcheck.contracts import check_jaxpr
@@ -33,10 +35,26 @@ ENGINE_BACKENDS = ("local", "sharded")
 KERNEL_BACKENDS = ("jnp", "pallas-interpret")
 
 
-def _tiny_graph():
+@dataclasses.dataclass
+class EntryTrace:
+    """One cached executable, re-traced: the raw material the downstream
+    collective-safety and cost-model passes analyze."""
+
+    key: tuple          # the ExecutableCache key
+    target: str         # engine:<backend>:<kernels>:<key head>
+    backend: str        # engine backend ("local" | "sharded")
+    kernels: str        # kernel backend name
+    jaxpr: object       # ClosedJaxpr from jax.make_jaxpr
+
+
+def _tiny_graph(scale: int = 1):
     from repro.graphstore import generators
 
-    return generators.rmat(120, 420, 4, seed=3, symmetrize=True)
+    # scale multiplies nodes AND edges so density (and therefore caps
+    # derived from plans) grows linearly — the cost pass compares peak
+    # bytes across two scales to assert the paper's linear-space bound
+    return generators.rmat(120 * scale, 420 * scale, 4, seed=3,
+                           symmetrize=True)
 
 
 def _probe_query():
@@ -53,19 +71,25 @@ def _key_head(key) -> str:
     return type(key).__name__
 
 
-def probe_engine(backend: str, kernels: str) -> list[Finding]:
-    """Drive one engine/kernels combination end to end and check every
-    executable it built."""
+def probe_traces(
+    backend: str, kernels: str, *, scale: int = 1
+) -> "tuple[list[Finding], list[EntryTrace]]":
+    """Drive one engine/kernels combination end to end, check every
+    executable it built (contracts + retrace rules), and return the
+    re-traced jaxprs for the collective-safety and cost-model passes."""
     from repro.api.session import GraphSession
 
     findings: list[Finding] = []
+    traces: list[EntryTrace] = []
     target = f"engine:{backend}:{kernels}"
     recorded: dict = {}
 
     def recorder(key, fn, args, kwargs):
         recorded.setdefault(key, (fn, args, kwargs))
 
-    session = GraphSession.open(_tiny_graph(), backend=backend, kernels=kernels)
+    session = GraphSession.open(
+        _tiny_graph(scale), backend=backend, kernels=kernels
+    )
     try:
         session.cache.recorder = recorder
         compiled = session.compile(_probe_query(), max_matches=0)
@@ -99,16 +123,36 @@ def probe_engine(backend: str, kernels: str) -> list[Finding]:
                 ))
                 continue
             findings.extend(check_jaxpr(jaxpr, ktarget))
+            traces.append(EntryTrace(
+                key=key, target=ktarget, backend=backend,
+                kernels=kernels, jaxpr=jaxpr,
+            ))
     finally:
         session.close()
+    return findings, traces
+
+
+def probe_engine(backend: str, kernels: str) -> list[Finding]:
+    """Contract/retrace findings only (see `probe_traces`)."""
+    findings, _ = probe_traces(backend, kernels)
     return findings
 
 
 def check_engines(
     backends=ENGINE_BACKENDS, kernels=KERNEL_BACKENDS
 ) -> list[Finding]:
+    findings, _ = check_engines_traces(backends, kernels)
+    return findings
+
+
+def check_engines_traces(
+    backends=ENGINE_BACKENDS, kernels=KERNEL_BACKENDS, *, scale: int = 1
+) -> "tuple[list[Finding], list[EntryTrace]]":
     findings: list[Finding] = []
+    traces: list[EntryTrace] = []
     for b in backends:
         for k in kernels:
-            findings.extend(probe_engine(b, k))
-    return findings
+            fs, ts = probe_traces(b, k, scale=scale)
+            findings.extend(fs)
+            traces.extend(ts)
+    return findings, traces

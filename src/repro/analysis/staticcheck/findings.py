@@ -61,15 +61,19 @@ def is_suppressed(sup: dict[int, set[str]], line: int, rule_id: str) -> bool:
     return rule_id in sup.get(line, ())
 
 
-def report_json(findings: Iterable[Finding]) -> str:
+def report_json(findings: Iterable[Finding], extras: dict | None = None) -> str:
+    """`extras` merges additional report sections (e.g. the collective
+    sequences and cost report) into the JSON document; reserved keys
+    cannot be overridden."""
     fs = list(findings)
-    return json.dumps(
+    doc = dict(extras or {})
+    doc.update(
         {
             "n_findings": len(fs),
             "rules": {
                 rid: dataclasses.asdict(r) for rid, r in sorted(RULES.items())
             },
             "findings": [f.to_dict() for f in fs],
-        },
-        indent=2,
+        }
     )
+    return json.dumps(doc, indent=2)

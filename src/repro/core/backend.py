@@ -124,6 +124,14 @@ def _contract_hash_join_probe():
     ), dict(dup_cap=4)
 
 
+def _contract_cin_layer():
+    return (
+        _ex((2, 3, 4), jnp.float32),   # xk
+        _ex((2, 2, 4), jnp.float32),   # x0
+        _ex((6, 3), jnp.float32),      # w
+    ), {}
+
+
 OP_CONTRACTS: tuple[OpContract, ...] = (
     OpContract("bitset_pack", _contract_bitset_pack, ("uint32",)),
     OpContract("bitset_unpack", _contract_bitset_unpack, ("bool",)),
@@ -132,6 +140,7 @@ OP_CONTRACTS: tuple[OpContract, ...] = (
     OpContract("candidate_filter", _contract_candidate_filter, ("bool",)),
     OpContract("stwig_expand", _contract_stwig_expand, ("int32", "int32")),
     OpContract("hash_join_probe", _contract_hash_join_probe, ("bool", "int32")),
+    OpContract("cin_layer", _contract_cin_layer, ("float32",)),
 )
 
 
@@ -215,6 +224,15 @@ class Kernels:
             ka_sorted, a_keys, a_valid, kb, b_keys, b_valid, dup_cap=dup_cap
         )
 
+    # ---------------------------------------------------------- signatures
+    def cin_layer(self, xk, x0, w) -> jnp.ndarray:
+        """One CIN layer (compressed interaction): ``(B, H, d) × (B, m, d)
+        × (H·m, H') → (B, H', d)`` — the contraction behind ROADMAP item
+        3's learned neighborhood-signature filter."""
+        from repro.kernels.cin.ref import cin_layer_reference
+
+        return cin_layer_reference(xk, x0, w)
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<Kernels {self.name!r}>"
 
@@ -276,6 +294,11 @@ class PallasKernels(Kernels):
         from repro.kernels.hash_join.hash_join import hash_join_probe
 
         return hash_join_probe(*args, interpret=self.interpret, **kw)
+
+    def cin_layer(self, xk, x0, w):
+        from repro.kernels.cin.cin import cin_layer
+
+        return cin_layer(xk, x0, w, interpret=self.interpret)
 
 
 # ------------------------------------------------------------------ registry

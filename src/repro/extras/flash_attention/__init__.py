@@ -1,0 +1,5 @@
+from repro.extras.flash_attention.flash_attention import flash_attention
+from repro.extras.flash_attention.ops import attention_fwd
+from repro.extras.flash_attention.ref import mha_reference
+
+__all__ = ["flash_attention", "attention_fwd", "mha_reference"]

@@ -7,8 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.flash_attention import flash_attention
-from repro.kernels.flash_attention.ref import mha_reference
+from repro.extras.flash_attention.flash_attention import flash_attention
+from repro.extras.flash_attention.ref import mha_reference
 
 
 def _on_tpu() -> bool:

@@ -1,0 +1,4 @@
+from repro.extras.join_probe.join_probe import probe_lower_bound, probe_window
+from repro.extras.join_probe import ops, ref
+
+__all__ = ["probe_lower_bound", "probe_window", "ops", "ref"]

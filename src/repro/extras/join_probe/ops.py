@@ -5,8 +5,8 @@ import functools
 
 import jax
 
-from repro.kernels.join_probe import join_probe as k
-from repro.kernels.join_probe import ref
+from repro.extras.join_probe import join_probe as k
+from repro.extras.join_probe import ref
 
 
 def _on_tpu() -> bool:

@@ -1,0 +1,4 @@
+from repro.extras.segment_mp.segment_mp import segment_mp, segment_mp_partials
+from repro.extras.segment_mp import ops, ref
+
+__all__ = ["segment_mp", "segment_mp_partials", "ops", "ref"]

@@ -5,8 +5,8 @@ import functools
 
 import jax
 
-from repro.kernels.segment_mp import ref
-from repro.kernels.segment_mp import segment_mp as k
+from repro.extras.segment_mp import ref
+from repro.extras.segment_mp import segment_mp as k
 
 
 def _on_tpu() -> bool:

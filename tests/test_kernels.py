@@ -7,7 +7,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 # ------------------------------------------------------------------ flash
-from repro.kernels.flash_attention import flash_attention, mha_reference
+from repro.extras.flash_attention import flash_attention, mha_reference
 
 
 @settings(max_examples=10, deadline=None)
@@ -71,8 +71,8 @@ def test_bitset_matches_graphstore_convention():
 
 
 # ------------------------------------------------------------- join probe
-from repro.kernels.join_probe import probe_lower_bound, probe_window
-from repro.kernels.join_probe.ref import lower_bound_reference, window_reference
+from repro.extras.join_probe import probe_lower_bound, probe_window
+from repro.extras.join_probe.ref import lower_bound_reference, window_reference
 
 
 @settings(max_examples=15, deadline=None)
@@ -96,8 +96,8 @@ def test_join_probe_sweep(na, nb_pow, dup, seed):
 
 
 # ------------------------------------------------------------- segment_mp
-from repro.kernels.segment_mp import segment_mp
-from repro.kernels.segment_mp.ref import segment_mp_reference
+from repro.extras.segment_mp import segment_mp
+from repro.extras.segment_mp.ref import segment_mp_reference
 
 
 @settings(max_examples=12, deadline=None)

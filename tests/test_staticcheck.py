@@ -13,8 +13,15 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.staticcheck import archlint, cachekeys, contracts, run_all
-from repro.analysis.staticcheck.findings import RULES
+from repro.analysis.staticcheck import (
+    archlint,
+    cachekeys,
+    collective_safety,
+    contracts,
+    costmodel,
+    run_all,
+)
+from repro.analysis.staticcheck.findings import RULES, report_json
 from repro.core import backend as backend_lib
 from repro.core.backend import OpContract
 
@@ -281,6 +288,236 @@ def test_real_contracts_trace_clean_on_all_backends():
     assert contracts.check_kernel_contracts(backends) == []
 
 
+# ------------------------------------------------- collective safety (d)
+def _shard_trace(body, mesh_axes, in_specs, out_specs, *args):
+    """Trace `body` under a shard_map on a mesh built from this process's
+    single device (axis sizes 1 — the analysis is static, sizes only name
+    the axes)."""
+    import numpy as np
+
+    from jax.sharding import Mesh
+    from repro.compat import shard_map
+
+    devs = np.array(jax.devices()[:1]).reshape((1,) * len(mesh_axes))
+    mesh = Mesh(devs, tuple(mesh_axes))
+    f = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    return jax.make_jaxpr(f)(*args)
+
+
+def _one_finding(findings, rule_id):
+    assert [f.rule for f in findings] == [rule_id], \
+        "\n".join(str(f) for f in findings)
+    # the acceptance path: the finding must survive into --json output
+    assert rule_id in report_json(findings)
+    return findings[0]
+
+
+def test_collective_divergent_control_planted():
+    from jax.sharding import PartitionSpec as P
+
+    def body(v):
+        i = jax.lax.axis_index("data")
+        return jax.lax.cond(
+            i > 0, lambda u: jax.lax.psum(u, "data"), lambda u: u, v
+        )
+
+    j = _shard_trace(body, ("data",), P("data"), P("data"),
+                     jnp.arange(8, dtype=jnp.int32))
+    f = _one_finding(
+        collective_safety.check_collective_safety(j, "fx"),
+        "coll-divergent-control",
+    )
+    assert "psum" in f.message
+
+
+def test_collective_ppermute_bijection_planted():
+    from jax.sharding import PartitionSpec as P
+
+    def body(v):  # empty perm: nobody sends, everybody zero-fills
+        return jax.lax.ppermute(v, "data", perm=[])
+
+    j = _shard_trace(body, ("data",), P("data"), P("data"),
+                     jnp.arange(8, dtype=jnp.int32))
+    _one_finding(
+        collective_safety.check_collective_safety(j, "fx"),
+        "coll-ppermute-bijection",
+    )
+
+
+def test_collective_axis_name_planted():
+    from jax.sharding import PartitionSpec as P
+
+    def body(v):  # "model" is a mesh axis, but not the engine's axis
+        return jax.lax.psum(v, "model")
+
+    j = _shard_trace(body, ("data", "model"), P("data"), P("data"),
+                     jnp.arange(8, dtype=jnp.int32).reshape(8, 1))
+    _one_finding(
+        collective_safety.check_collective_safety(
+            j, "fx", allowed_axes=("data",)
+        ),
+        "coll-axis-name",
+    )
+
+
+def test_collective_head_gather_planted():
+    from jax.sharding import PartitionSpec as P
+
+    def body(h, t):  # Theorem 5: the head table must never be gathered
+        g = jax.lax.all_gather(h, "data", tiled=True)
+        return g + t
+
+    x = jnp.arange(8, dtype=jnp.int32)
+    j = _shard_trace(body, ("data",), (P("data"), P("data")), P("data"),
+                     x, x)
+    _one_finding(
+        collective_safety.check_collective_safety(j, "fx", head_invars=(0,)),
+        "coll-head-gather",
+    )
+    # the same program is clean when the gathered operand is not the head
+    assert collective_safety.check_collective_safety(
+        j, "fx", head_invars=(1,)
+    ) == []
+
+
+def test_collective_clean_on_benign_body():
+    from jax.sharding import PartitionSpec as P
+
+    def body(v):  # full-axis reduce + bijective self-permute: all legal
+        s = jax.lax.psum(v, "data")
+        p = jax.lax.ppermute(v, "data", perm=[(0, 0)])
+        return s + p
+
+    j = _shard_trace(body, ("data",), P("data"), P("data"),
+                     jnp.arange(8, dtype=jnp.int32))
+    reports = []
+    assert collective_safety.check_collective_safety(
+        j, "fx", allowed_axes=("data",), reports=reports
+    ) == []
+    assert reports[0].collectives == ["psum", "ppermute"]
+
+
+def test_head_taints_for_key_positions():
+    schemas = ((0, 1), (1, 2), (2, 3))
+    assert collective_safety.head_taints_for_key(
+        ("dist_join", schemas, (0, 1, 2), 1, 64, 4, (8, 8, 8), None, "jnp")
+    ) == (1, 4)
+    assert collective_safety.head_taints_for_key(
+        ("dist_gather", 3, 2, (8, 8, 8), None)
+    ) == (2, 5)
+    assert collective_safety.head_taints_for_key(
+        ("dist_join_block", schemas, (0, 1), 64, 4, 8, (8, 8), 16, "jnp")
+    ) == (0, 1)
+    assert collective_safety.head_taints_for_key(("dist_match", "x")) == ()
+
+
+# ------------------------------------------------------- cost model (e)
+def _est(target, peak=1.0, flops=1.0, coll=0.0):
+    return costmodel.CostEstimate(
+        target=target, peak_bytes=peak, flops=flops,
+        collective_bytes=coll, collective_by_kind={},
+    )
+
+
+_TEST_BUDGETS = {
+    "linear_slack": 2.0,
+    "entries": {
+        "engine:test:jnp:match": {
+            "peak_bytes": 1000, "flops": 5000, "collective_bytes": 100,
+        },
+    },
+}
+
+
+def test_cost_budget_overflow_planted():
+    f = _one_finding(
+        costmodel.check_budgets(
+            [_est("engine:test:jnp:match", peak=1500, flops=10, coll=0)],
+            _TEST_BUDGETS,
+        ),
+        "cost-budget-exceeded",
+    )
+    assert "peak_bytes" in f.message
+
+
+def test_cost_budget_missing_fails_closed():
+    _one_finding(
+        costmodel.check_budgets(
+            [_est("engine:test:jnp:new_entry_point", peak=1)], _TEST_BUDGETS,
+        ),
+        "cost-budget-missing",
+    )
+
+
+def test_cost_budget_within_ceiling_is_clean():
+    assert costmodel.check_budgets(
+        [_est("engine:test:jnp:match", peak=999, flops=4999, coll=99)],
+        _TEST_BUDGETS,
+    ) == []
+
+
+def test_cost_superlinear_memory_planted():
+    small = [_est("engine:test:jnp:join", peak=1000)]
+    # quadratic structure: 4x graph -> 16x bytes, bound is 2.0 * 4 = 8x
+    _one_finding(
+        costmodel.check_linear_memory(
+            small, [_est("engine:test:jnp:join", peak=16000)],
+            size_ratio=4.0, slack=2.0,
+        ),
+        "cost-superlinear-memory",
+    )
+    assert costmodel.check_linear_memory(
+        small, [_est("engine:test:jnp:join", peak=4000)],
+        size_ratio=4.0, slack=2.0,
+    ) == []
+
+
+def test_cost_estimate_counts_quadratic_intermediate():
+    """The liveness peak must see a materialized O(n^2) outer product."""
+    n = 64
+
+    def outer(a, b):
+        z = a[:, None] * b[None, :]          # (n, n) float32
+        return z.sum()
+
+    est = costmodel.estimate(
+        jax.make_jaxpr(outer)(
+            jnp.ones((n,), jnp.float32), jnp.ones((n,), jnp.float32)
+        ),
+        target="fx",
+    )
+    assert est.peak_bytes >= n * n * 4
+
+
+def test_checked_in_budgets_cover_probe_targets():
+    """Every engine×kernels×entry-point the probe records has a budget row
+    (the fail-closed contract, checked without running the probe)."""
+    budgets = costmodel.load_budgets()
+    targets = set(budgets["entries"])
+    for eng, heads in (
+        ("local", ("match", "join")),
+        ("sharded", ("dist_match", "dist_join", "dist_gather",
+                     "dist_join_block")),
+    ):
+        for k in ("jnp", "pallas-interpret"):
+            for h in heads:
+                assert f"engine:{eng}:{k}:{h}" in targets
+
+
+def test_cost_flops_agree_with_hlo_within_10pct():
+    """Acceptance: jaxpr FLOP estimates vs XLA cost_analysis on the
+    benchmarked kernels (matmul-shaped cin layer + the join probe's sort)."""
+    from repro.kernels.cin.ref import cin_layer_reference
+
+    xk = jnp.ones((4, 8, 16), jnp.float32)
+    x0 = jnp.ones((4, 4, 16), jnp.float32)
+    w = jnp.ones((32, 8), jnp.float32)
+    r = costmodel.hlo_cross_check(cin_layer_reference, xk, x0, w)
+    assert r["hlo_flops"] > 0
+    assert abs(r["est_flops"] - r["hlo_flops"]) <= 0.1 * r["hlo_flops"], r
+
+
 # ----------------------------------------------------------- clean repo
 def test_static_passes_clean_on_repo():
     """The repo's own tree carries zero findings (the CI gate); the engine
@@ -291,6 +528,6 @@ def test_static_passes_clean_on_repo():
 
 
 def test_every_rule_has_a_registered_description():
-    assert len(RULES) >= 8
+    assert len(RULES) >= 15  # incl. the collective-safety + cost rules
     for r in RULES.values():
         assert r.layer and r.description
