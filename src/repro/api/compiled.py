@@ -14,12 +14,12 @@ from typing import TYPE_CHECKING, Iterator
 
 import numpy as np
 
-from repro.core.engine import grow_caps
-from repro.core.plan import QueryPlan
+from repro.core.plan import QueryPlan, caps_from_plan
 from repro.core.query import QueryGraph
 from repro.core.result import MatchPage, MatchResult
 from repro.core.stream import stream_blocks  # noqa: F401  (re-export: the
 # shared per-block streaming driver both engines and `stream` run on)
+from repro.runtime.resilience import QueryGuard, RetryPolicy, adaptive_run
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.api.session import GraphSession
@@ -47,6 +47,10 @@ class CompiledQuery:
         max_matches: int | None = None,
         adaptive: bool = True,
         max_retries: int = 6,
+        deadline_s: float | None = None,
+        memory_budget_bytes: float | None = None,
+        guard: QueryGuard | None = None,
+        retry_policy: RetryPolicy | None = None,
         **engine_kw,
     ) -> MatchResult:
         """Execute the compiled plan.
@@ -58,23 +62,52 @@ class CompiledQuery:
         possibly partial, result — the paper's first-K semantics.
         ``engine_kw`` passes backend-specific options through (e.g.
         ``use_ring=True`` on the sharded backend).
+
+        Resilience (`repro.runtime.resilience`): ``deadline_s`` /
+        ``memory_budget_bytes`` build a `QueryGuard` (or pass ``guard``
+        to share one across calls) enforced between retries — a trip
+        returns the partial result with a typed
+        ``stats.degrade_reason``; ``retry_policy`` controls backoff and
+        the cap-growth byte ceiling. Escalated plans recompile through
+        the session cache, so retries reuse every executable whose
+        static spec survived the escalation.
         """
         plan = self.plan
         if max_matches is not None and max_matches != plan.max_matches:
             plan = dataclasses.replace(plan, max_matches=max_matches)
         engine = self.session.engine
-        res = engine._match_once(self.query, plan=plan, **engine_kw)
-        retries = 0
-        caps = dict(self.caps)
-        while adaptive and not res.complete and retries < max_retries:
-            retries += 1
-            caps = grow_caps(caps)
+        policy = retry_policy or RetryPolicy(max_retries=max_retries)
+        if guard is None and (
+            deadline_s is not None or memory_budget_bytes is not None
+        ):
+            guard = QueryGuard(
+                deadline_s=deadline_s,
+                memory_budget_bytes=memory_budget_bytes,
+            )
+
+        def first() -> MatchResult:
+            return engine._match_once(
+                self.query, plan=plan, retry_policy=policy, **engine_kw
+            )
+
+        def escalate(caps: dict) -> MatchResult:
             esc = self.session.replan(
                 self.query, **dict(caps, max_matches=plan.max_matches)
             )
-            res = engine._match_once(self.query, plan=esc, **engine_kw)
-        res.stats.retries = retries
-        return res
+            return engine._match_once(
+                self.query, plan=esc, retry_policy=policy, **engine_kw
+            )
+
+        return adaptive_run(
+            first,
+            escalate,
+            caps_from_plan(plan, dict(self.caps)),
+            n_qnodes=self.query.n_nodes,
+            backend=self.session.backend,
+            policy=policy,
+            guard=guard,
+            adaptive=adaptive,
+        )
 
     def stream(
         self,
@@ -82,6 +115,8 @@ class CompiledQuery:
         *,
         max_matches: int | None = None,
         block_rows: int | None = None,
+        deadline_s: float | None = None,
+        guard: QueryGuard | None = None,
         **engine_kw,
     ) -> Iterator[MatchPage]:
         """Yield matches in pages of ``page_size`` rows as they materialize
@@ -97,15 +132,24 @@ class CompiledQuery:
         block's join re-probes the full fetched tables, so tiny blocks make
         the first page cheap but a fully-consumed stream expensive — prefer
         `run` when you know you want every match.
+
+        ``deadline_s`` (or a shared ``guard``) bounds the stream: the
+        guard is checked between blocks, and on expiry the stream ends
+        with one final degraded page — pages already delivered stay
+        valid, remaining blocks are never joined. Every page carries the
+        stream's shared `MatchStats` (retries, final caps, stage times).
         """
         if page_size < 1:
             raise ValueError("page_size must be >= 1")
+        if guard is None and deadline_s is not None:
+            guard = QueryGuard(deadline_s=deadline_s)
         limit = self.plan.max_matches if max_matches is None else max_matches
         blocks = stream_blocks(
             self.session.engine,
             self.query,
             self.plan,
             block_rows=block_rows or max(page_size, 1024),
+            guard=guard,
             **engine_kw,
         )
         buf: list[np.ndarray] = []
@@ -114,16 +158,18 @@ class CompiledQuery:
         index = 0
         complete = True
         incomplete_seen = False  # some emitted page already carries False
+        stats = None  # the stream's shared stats, captured from the blocks
 
         def page(rows: np.ndarray, complete: bool) -> MatchPage:
             nonlocal index, emitted, incomplete_seen
             incomplete_seen |= not complete
-            p = MatchPage(rows=rows, index=index, complete=complete)
+            p = MatchPage(rows=rows, index=index, complete=complete, stats=stats)
             index += 1
             emitted += rows.shape[0]
             return p
 
         for blk in blocks:
+            stats = blk.stats if blk.stats is not None else stats
             complete &= blk.complete
             buf.append(blk.rows)
             buffered += blk.rows.shape[0]

@@ -47,6 +47,7 @@ class GraphSession:
         mesh=None,
         partition_mode: str = "hash",
         cache_size: int = 512,
+        chaos=None,
     ) -> "GraphSession":
         """Open a session, selecting and wrapping the right engine.
 
@@ -61,6 +62,13 @@ class GraphSession:
         instance (`repro.core.backend`). The choice keys every cached
         executable, so sessions can be compared across kernel backends
         without recompiling each other's programs away.
+
+        ``chaos`` attaches a seeded fault injector
+        (`repro.runtime.chaos.ChaosInjector`) to the engine: injected
+        faults (slow/dead shard, truncated fetch, forced overflow) are
+        handled by the resilience layer and surface as typed partial
+        results. The injector wraps the kernel backend under a distinct
+        name, so chaos executables never collide with clean ones.
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -101,7 +109,7 @@ class GraphSession:
                     f"local backend needs a 1-shard partition, got {pg.n_shards} "
                     "shards (use backend='sharded' or re-partition)"
                 )
-            engine = SubgraphMatcher(pg, cache=cache, kernels=kern)
+            engine = SubgraphMatcher(pg, cache=cache, kernels=kern, chaos=chaos)
         else:
             from jax.sharding import Mesh
 
@@ -113,7 +121,9 @@ class GraphSession:
                         f"sharded backend needs ≥{pg.n_shards} devices, have {n_dev}"
                     )
                 mesh = Mesh(np.array(jax.devices()[: pg.n_shards]), ("data",))
-            engine = DistributedMatcher(pg, mesh, cache=cache, kernels=kern)
+            engine = DistributedMatcher(
+                pg, mesh, cache=cache, kernels=kern, chaos=chaos
+            )
         return cls(pg, engine, backend, cache)
 
     # ----------------------------------------------------------- query API
@@ -126,9 +136,26 @@ class GraphSession:
         plan = self._engine.plan(query, **caps)
         return CompiledQuery(session=self, query=query, plan=plan, caps=caps)
 
-    def run(self, query: QueryGraph, *, adaptive: bool = True, **caps) -> MatchResult:
-        """One-shot convenience: ``compile(query).run()``."""
-        return self.compile(query, **caps).run(adaptive=adaptive)
+    def run(
+        self,
+        query: QueryGraph,
+        *,
+        adaptive: bool = True,
+        deadline_s: float | None = None,
+        memory_budget_bytes: float | None = None,
+        retry_policy=None,
+        **caps,
+    ) -> MatchResult:
+        """One-shot convenience: ``compile(query).run()``. ``deadline_s`` /
+        ``memory_budget_bytes`` bound the query (a trip returns a partial
+        result with a typed ``stats.degrade_reason``); ``retry_policy``
+        tunes adaptive escalation (`repro.runtime.resilience`)."""
+        return self.compile(query, **caps).run(
+            adaptive=adaptive,
+            deadline_s=deadline_s,
+            memory_budget_bytes=memory_budget_bytes,
+            retry_policy=retry_policy,
+        )
 
     def stream(
         self,
@@ -137,18 +164,21 @@ class GraphSession:
         page_size: int = 256,
         max_matches: int | None = None,
         block_rows: int | None = None,
+        deadline_s: float | None = None,
         engine_kw: dict | None = None,
         **caps,
     ):
         """One-shot convenience: ``compile(query).stream(...)`` — pipelined
         first-K pages on either backend. ``block_rows`` is forwarded to
-        `CompiledQuery.stream` (the latency/throughput knob), ``engine_kw``
+        `CompiledQuery.stream` (the latency/throughput knob),
+        ``deadline_s`` bounds the stream at block boundaries, ``engine_kw``
         carries backend options (e.g. ``{"use_ring": True}``), and ``caps``
         go to `compile`."""
         return self.compile(query, **caps).stream(
             page_size=page_size,
             max_matches=max_matches,
             block_rows=block_rows,
+            deadline_s=deadline_s,
             **(engine_kw or {}),
         )
 

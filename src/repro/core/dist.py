@@ -35,12 +35,18 @@ from repro.core import join as join_lib
 from repro.core.backend import Kernels, resolve_kernels
 from repro.core.cache import ExecutableCache
 from repro.core.collectives import fetch_load_set, or_allreduce
-from repro.core.engine import MatchResult, caps_from_plan, grow_caps
 from repro.core.match import Bindings, ShardGraph, match_stwig_shard
-from repro.core.plan import QueryPlan, STwigSpec, make_plan
+from repro.core.plan import QueryPlan, STwigSpec, caps_from_plan, make_plan
 from repro.core.query import QueryGraph
-from repro.core.result import MatchPage, MatchStats
+from repro.core.result import MatchPage, MatchResult, MatchStats
 from repro.core.stream import stream_blocks
+from repro.runtime.chaos import ShardFaultError
+from repro.runtime.resilience import (
+    DegradeReason,
+    RetryPolicy,
+    adaptive_run,
+    stage,
+)
 from repro.graphstore.cluster_graph import ClusterGraphIndex
 from repro.graphstore.partition import PartitionedGraph
 
@@ -96,6 +102,9 @@ class DistributedMatcher:
     cgi: ClusterGraphIndex = None  # type: ignore[assignment]
     cache: ExecutableCache = None  # type: ignore[assignment]
     kernels: "str | Kernels | None" = None
+    # optional seeded fault injector (repro.runtime.chaos): consulted at
+    # the host-side fetch/join boundaries, never inside shard_map programs
+    chaos: object = None
 
     def __post_init__(self):
         assert self.mesh.devices.size == self.pg.n_shards, (
@@ -109,6 +118,8 @@ class DistributedMatcher:
         # kernel backend for every per-shard dense step; reassignable —
         # executables are keyed by (static spec, kernels.name)
         self.kernels = resolve_kernels(self.kernels)
+        if self.chaos is not None:
+            self.kernels = self.chaos.wrap_kernels(self.kernels)
         self._g = _StackedGraph(self.pg, self.mesh)
         self._rep = NamedSharding(self.mesh, P())
         # cumulative device invocations of the block-parameterized join step
@@ -423,17 +434,31 @@ class DistributedMatcher:
         *,
         adaptive: bool = True,
         max_retries: int = 6,
+        use_ring: bool = False,
+        guard: "QueryGuard | None" = None,
+        retry_policy: RetryPolicy | None = None,
         **kw,
     ) -> MatchResult:
-        res = self._match_once(query, plan=plan, **kw)
-        retries = 0
-        caps = caps_from_plan(plan, kw) if plan is not None else dict(kw)
-        while adaptive and not res.complete and retries < max_retries:
-            retries += 1
-            caps = grow_caps(caps)
-            res = self._match_once(query, **caps)
-        res.stats.retries = retries
-        return res
+        """Adaptive matching through the shared resilience loop
+        (`repro.runtime.resilience.adaptive_run`): same escalation
+        semantics as the local engine, plus ``retry_policy`` also paces
+        the fetch-recovery retries when a chaos injector is attached."""
+        policy = retry_policy or RetryPolicy(max_retries=max_retries)
+        plan0 = plan if plan is not None else self.plan(query, **kw)
+        return adaptive_run(
+            lambda: self._match_once(
+                query, plan=plan0, use_ring=use_ring, retry_policy=policy
+            ),
+            lambda caps: self._match_once(
+                query, use_ring=use_ring, retry_policy=policy, **caps
+            ),
+            caps_from_plan(plan0, kw),
+            n_qnodes=query.n_nodes,
+            backend="sharded",
+            policy=policy,
+            guard=guard,
+            adaptive=adaptive,
+        )
 
     def match_stream(
         self,
@@ -461,15 +486,28 @@ class DistributedMatcher:
         query: QueryGraph,
         plan: QueryPlan | None = None,
         use_ring: bool = False,
+        retry_policy: RetryPolicy | None = None,
         **kw,
     ) -> "_ShardedStreamState":
         """The run-once half of a streamed query: exploration, load sets and
         the remote-table fetch all happen here; the returned state caches
-        the fetched tables on device for every subsequent block join."""
+        the fetched tables on device for every subsequent block join. A
+        shard fault at the fetch (chaos-injected) degrades every page of
+        the stream: the state carries the shard-fault reason and the
+        driver marks pages ``complete=False``."""
         plan = plan or self.plan(query, **kw)
         stats = MatchStats(backend="sharded", n_shards=self.pg.n_shards)
-        all_cols, all_valids, overflow = self._explore(plan, stats)
+        with stage(stats, "explore"):
+            all_cols, all_valids, overflow = self._explore(plan, stats)
+        if self.chaos is not None and self.chaos.forced_overflow():
+            overflow = True
         load, load_masks = self._load_masks(query, plan)
+        with stage(stats, "fetch"):
+            all_valids, fault = self._chaos_gate(
+                stats, retry_policy or RetryPolicy(), all_valids, plan.head
+            )
+        if fault:
+            stats.degrade_reason = DegradeReason.SHARD_FAULT.value
         schemas = tuple(
             join_lib.Schema(
                 qnodes=s.qnodes, qlabels=(s.root_label,) + s.child_labels
@@ -485,11 +523,16 @@ class DistributedMatcher:
         )
         ring_radii = self.ring_radii_for(load) if use_ring else None
         caps = tuple(int(c.shape[1]) for c in all_cols)
-        if len(schemas) > 1:
-            gfn = self._gather_step(len(schemas), plan.head, caps, ring_radii)
-            g_cols, g_valids = gfn(tuple(all_cols), tuple(all_valids), load_masks)
-        else:
-            g_cols, g_valids = (), ()
+        with stage(stats, "fetch"):
+            if len(schemas) > 1:
+                gfn = self._gather_step(
+                    len(schemas), plan.head, caps, ring_radii
+                )
+                g_cols, g_valids = gfn(
+                    tuple(all_cols), tuple(all_valids), load_masks
+                )
+            else:
+                g_cols, g_valids = (), ()
         stats.join_order = [schemas[i].qnodes for i in order]
         head_valid = all_valids[plan.head]
         # one host copy of the head validity mask: blocks where no shard has
@@ -518,6 +561,10 @@ class DistributedMatcher:
         (disjoint) per-shard results host-side."""
         if not state.head_valid_any[lo : lo + block_rows].any():
             return np.zeros((0, state.plan.n_qnodes), np.int64), False
+        if self.chaos is not None:
+            d = self.chaos.block_delay()
+            if d > 0:
+                time.sleep(d)
         jfn = self._join_block_step(
             state.schemas,
             state.order,
@@ -528,16 +575,18 @@ class DistributedMatcher:
             block_rows,
         )
         self.join_block_calls += 1
-        cols, valid, n_rows, ovf = jfn(
-            state.head_cols,
-            state.head_valid,
-            state.gathered_cols,
-            state.gathered_valids,
-            jnp.int32(lo),
-        )
-        rows = self._union_rows(
-            cols, valid, state.schemas, state.order, max_matches=0
-        )
+        with stage(state.stats, "join"):
+            cols, valid, n_rows, ovf = jfn(
+                state.head_cols,
+                state.head_valid,
+                state.gathered_cols,
+                state.gathered_valids,
+                jnp.int32(lo),
+            )
+        with stage(state.stats, "materialize"):
+            rows = self._union_rows(
+                cols, valid, state.schemas, state.order, max_matches=0
+            )
         return rows, bool(jnp.any(ovf))
 
     # ------------------------------------------------------ execution phases
@@ -618,13 +667,21 @@ class DistributedMatcher:
         query: QueryGraph,
         plan: QueryPlan | None = None,
         use_ring: bool = False,
+        retry_policy: RetryPolicy | None = None,
         **kw,
     ) -> MatchResult:
         t0 = time.perf_counter()
         plan = plan or self.plan(query, **kw)
         stats = MatchStats(backend="sharded", n_shards=self.pg.n_shards)
-        all_cols, all_valids, overflow = self._explore(plan, stats)
+        with stage(stats, "explore"):
+            all_cols, all_valids, overflow = self._explore(plan, stats)
         load, load_masks = self._load_masks(query, plan)
+        with stage(stats, "fetch"):
+            all_valids, fault = self._chaos_gate(
+                stats, retry_policy or RetryPolicy(), all_valids, plan.head
+            )
+        if self.chaos is not None and self.chaos.forced_overflow():
+            overflow = True
 
         schemas = tuple(
             join_lib.Schema(
@@ -637,32 +694,112 @@ class DistributedMatcher:
         )
         caps = tuple(int(c.shape[1]) for c in all_cols)
         ring_radii = self.ring_radii_for(load) if use_ring else None
-        jfn = self._join_step(
-            schemas,
-            order,
-            plan.head,
-            plan.join_rows_cap,
-            plan.join_dup_cap,
-            caps,
-            ring_radii,
-        )
-        cols, valid, n_rows, ovf = jfn(
-            tuple(all_cols), tuple(all_valids), load_masks
-        )
-        overflow |= bool(jnp.any(ovf))
+        with stage(stats, "join"):
+            jfn = self._join_step(
+                schemas,
+                order,
+                plan.head,
+                plan.join_rows_cap,
+                plan.join_dup_cap,
+                caps,
+                ring_radii,
+            )
+            cols, valid, n_rows, ovf = jfn(
+                tuple(all_cols), tuple(all_valids), load_masks
+            )
+            overflow |= bool(jnp.any(ovf))
 
         # ---- union across shards (already disjoint) ------------------------
-        rows_old = self._union_rows(cols, valid, schemas, order, plan.max_matches)
+        with stage(stats, "materialize"):
+            rows_old = self._union_rows(
+                cols, valid, schemas, order, plan.max_matches
+            )
         stats.time_s = time.perf_counter() - t0
         stats.join_order = [schemas[i].qnodes for i in order]
         stats.cache_hits = self.cache.hits
         stats.cache_misses = self.cache.misses
+        if fault:
+            stats.degrade_reason = DegradeReason.SHARD_FAULT.value
         return MatchResult(
             rows=rows_old,
             n_matches=int(rows_old.shape[0]),
-            complete=not overflow,
+            complete=not (overflow or fault),
             stats=stats,
         )
+
+    # -------------------------------------------------- fault handling
+    def _chaos_gate(
+        self, stats: MatchStats, policy: RetryPolicy, all_valids, head_pos: int
+    ):
+        """The host-side fetch boundary: consult the chaos injector (when
+        attached), retry dead fetches with the policy's jittered backoff,
+        and degrade to the surviving shards' rows by masking the faulty
+        shard's stacked validity. Returns (all_valids, faulted). Runs
+        BEFORE the gather/join shard_map programs — an SPMD program can't
+        lose a shard mid-flight, a memory cloud loses it at fetch time."""
+        stats.shard_health = {k: "ok" for k in range(self.pg.n_shards)}
+        chaos = self.chaos
+        if chaos is None:
+            return all_valids, False
+        fault = False
+        ev = chaos.fetch_delay()
+        if ev is not None:
+            k, d = ev
+            time.sleep(d)
+            stats.shard_health[k] = "slow"
+        attempt = 0
+        while True:
+            try:
+                chaos.try_fetch()
+                if attempt > 0:
+                    stats.shard_health[chaos.config.dead_shard] = "recovered"
+                break
+            except ShardFaultError as e:
+                if attempt >= policy.fetch_retries:
+                    all_valids = self._mask_shard(all_valids, e.shard)
+                    stats.shard_health[e.shard] = "dead"
+                    fault = True
+                    break
+                policy.sleep(attempt, policy.fetch_backoff_s)
+                attempt += 1
+                stats.fetch_retries += 1
+        tr = chaos.truncation()
+        if tr is not None:
+            k, keep = tr
+            all_valids = self._mask_shard(
+                all_valids, k, head_pos=head_pos, keep_frac=keep
+            )
+            if stats.shard_health.get(k) == "ok":
+                stats.shard_health[k] = "truncated"
+            fault = True
+        return all_valids, fault
+
+    def _mask_shard(
+        self,
+        all_valids,
+        shard: int,
+        head_pos: int | None = None,
+        keep_frac: float | None = None,
+    ):
+        """Invalidate (all of, or the tail of) one shard's rows in the
+        stacked validity masks — host-side, so results built from the
+        masked tables are a correct subset of the true row set, never a
+        wrong one. With ``keep_frac`` (the truncated-payload fault) the
+        head table is left intact: it is never fetched (Theorem 5), so a
+        transfer can't truncate it."""
+        sh = NamedSharding(self.mesh, P(AXIS))
+        out = []
+        for i, v in enumerate(all_valids):
+            if keep_frac is not None and i == head_pos:
+                out.append(v)
+                continue
+            vh = np.array(jax.device_get(v))
+            if keep_frac is None:
+                vh[shard] = False
+            else:
+                vh[shard, int(keep_frac * vh.shape[1]):] = False
+            out.append(jax.device_put(vh, sh))
+        return out
 
 
 @dataclasses.dataclass(eq=False)

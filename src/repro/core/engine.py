@@ -31,13 +31,23 @@ from repro.core.match import (
     apply_binding_update,
     match_stwig_shard,
 )
-from repro.core.plan import QueryPlan, STwigSpec, make_plan
+from repro.core.plan import QueryPlan, STwigSpec, caps_from_plan, make_plan
 from repro.core.query import QueryGraph
 from repro.core.result import MatchPage, MatchResult, MatchStats
 from repro.core.stream import stream_blocks
 from repro.graphstore.partition import PartitionedGraph
+from repro.runtime.resilience import RetryPolicy, adaptive_run, grow_caps, stage
 
-__all__ = ["MatchResult", "MatchStats", "MatchPage", "SubgraphMatcher"]
+__all__ = [
+    "MatchResult",
+    "MatchStats",
+    "MatchPage",
+    "SubgraphMatcher",
+    # canonical homes are repro.runtime.resilience / repro.core.plan;
+    # re-exported here for the engine-level callers that always used them
+    "grow_caps",
+    "caps_from_plan",
+]
 
 
 def _concat_tables(tables: list[STwigTable]) -> join_lib.JoinTable:
@@ -55,40 +65,6 @@ def _concat_tables(tables: list[STwigTable]) -> join_lib.JoinTable:
         jnp.logical_or, [t.overflow for t in tables], jnp.bool_(False)
     )
     return join_lib.JoinTable(cols=cols, valid=valid, n_rows=n_rows, overflow=overflow)
-
-
-def grow_caps(caps: dict) -> dict:
-    """One step of adaptive capacity growth (paper §4.2: block sizes are set
-    by available memory; overflow doubles them and re-runs).
-
-    Growth is plain doubling for every capacity, so retry ``r`` runs at
-    ``2**r`` times the seed caps — geometric, bounded by ``max_retries``.
-    (An earlier version multiplied ``child_cap`` by ``2 * retries``,
-    compounding super-exponentially and risking OOM before the retry
-    budget was spent.)
-    """
-    caps = dict(caps)
-    caps["child_cap"] = 2 * caps.get("child_cap", 8)
-    caps["join_rows_cap"] = 2 * caps.get("join_rows_cap", 1 << 16)
-    caps["join_dup_cap"] = 2 * caps.get("join_dup_cap", 64)
-    return caps
-
-
-def caps_from_plan(plan: QueryPlan, base: dict | None = None) -> dict:
-    """Recover the grow-able capacities from an already-made plan.
-
-    Used as the escalation seed when a caller passed an explicit ``plan``:
-    adaptive retries then double the plan's actual capacities instead of
-    silently restarting from the `make_plan` defaults (or, worse, not
-    retrying at all)."""
-    caps = dict(base or {})
-    caps.setdefault(
-        "child_cap", max((s.child_cap for s in plan.specs), default=8)
-    )
-    caps.setdefault("join_rows_cap", plan.join_rows_cap)
-    caps.setdefault("join_dup_cap", plan.join_dup_cap)
-    caps.setdefault("max_matches", plan.max_matches)
-    return caps
 
 
 @dataclasses.dataclass(eq=False)
@@ -117,6 +93,7 @@ class SubgraphMatcher:
         *,
         cache: ExecutableCache | None = None,
         kernels: "str | Kernels | None" = None,
+        chaos=None,
     ):
         assert 0 <= shard < pg.n_shards
         self.pg = pg
@@ -125,6 +102,13 @@ class SubgraphMatcher:
         # any time — executables are keyed by (static spec, kernels.name),
         # so switching backends mid-session cannot poison the cache
         self.kernels = resolve_kernels(kernels)
+        # optional seeded fault injector (repro.runtime.chaos). The local
+        # backend has no fetches, so only slow-step delays and forced
+        # overflow apply; the wrapped kernels' distinct name keeps chaos
+        # executables out of clean cache entries.
+        self.chaos = chaos
+        if chaos is not None:
+            self.kernels = chaos.wrap_kernels(self.kernels)
         # cumulative device invocations of the per-block join chain (the
         # streaming path); lets callers assert early-stopped streams skip work
         self.join_block_calls = 0
@@ -192,6 +176,8 @@ class SubgraphMatcher:
         *,
         adaptive: bool = True,
         max_retries: int = 6,
+        guard: "QueryGuard | None" = None,
+        retry_policy: "RetryPolicy | None" = None,
         **kw,
     ) -> MatchResult:
         """Match with adaptive capacity growth: if any block capacity
@@ -200,16 +186,26 @@ class SubgraphMatcher:
         an explicit ``plan`` is given, escalation starts from that plan's
         caps (like `CompiledQuery.run`) instead of being disabled. With
         ``adaptive=False`` the first (possibly partial) result is returned
-        with ``complete=False`` — the paper's first-K pipelined semantics."""
-        res = self._match_once(query, plan, **kw)
-        retries = 0
-        caps = caps_from_plan(plan, kw) if plan is not None else dict(kw)
-        while adaptive and not res.complete and retries < max_retries:
-            retries += 1
-            caps = grow_caps(caps)
-            res = self._match_once(query, None, **caps)
-        res.stats.retries = retries
-        return res
+        with ``complete=False`` — the paper's first-K pipelined semantics.
+
+        Escalation runs through `repro.runtime.resilience.adaptive_run`:
+        ``guard`` bounds the query by deadline/memory budget at the retry
+        boundaries, ``retry_policy`` adds jittered backoff and stops cap
+        growth at the budgets.json byte ceiling — both optional, both
+        defaulting to the historical behaviour (no deadline, checked-in
+        ceiling)."""
+        policy = retry_policy or RetryPolicy(max_retries=max_retries)
+        plan0 = plan if plan is not None else self.plan(query, **kw)
+        return adaptive_run(
+            lambda: self._match_once(query, plan0),
+            lambda caps: self._match_once(query, None, **caps),
+            caps_from_plan(plan0, kw),
+            n_qnodes=query.n_nodes,
+            backend="local",
+            policy=policy,
+            guard=guard,
+            adaptive=adaptive,
+        )
 
     def match_stream(
         self,
@@ -234,7 +230,10 @@ class SubgraphMatcher:
         reusable state object."""
         plan = plan or self.plan(query, **kw)
         stats = MatchStats(backend="local")
-        tables, schemas, explore_overflow = self._explore(plan, stats)
+        with stage(stats, "explore"):
+            tables, schemas, explore_overflow = self._explore(plan, stats)
+        if self.chaos is not None and self.chaos.forced_overflow():
+            explore_overflow = True
         order = tuple(join_lib.select_join_order(schemas, stats.stwig_rows))
         first = tables[order[0]]
         return _LocalStreamState(
@@ -257,21 +256,27 @@ class SubgraphMatcher:
         join chain and materialize the block's matches."""
         if not state.valid_host[lo : lo + block_rows].any():
             return np.zeros((0, state.plan.n_qnodes), np.int64), False
+        if self.chaos is not None:
+            d = self.chaos.block_delay()
+            if d > 0:
+                time.sleep(d)
         first = state.tables[state.order[0]]
         blk = join_lib.block_table(first, lo, block_rows)
         self.join_block_calls += 1
-        acc, acc_schema = blk, state.schemas[state.order[0]]
-        for idx in state.order[1:]:
-            fn, merged = self._join_fn(
-                acc_schema,
-                state.schemas[idx],
-                state.plan.join_rows_cap,
-                state.plan.join_dup_cap,
-                int(acc.cols.shape[0]),
-                int(state.tables[idx].cols.shape[0]),
-            )
-            acc, acc_schema = fn(acc, state.tables[idx]), merged
-        rows = self._materialize(acc, acc_schema, max_matches=0)
+        with stage(state.stats, "join"):
+            acc, acc_schema = blk, state.schemas[state.order[0]]
+            for idx in state.order[1:]:
+                fn, merged = self._join_fn(
+                    acc_schema,
+                    state.schemas[idx],
+                    state.plan.join_rows_cap,
+                    state.plan.join_dup_cap,
+                    int(acc.cols.shape[0]),
+                    int(state.tables[idx].cols.shape[0]),
+                )
+                acc, acc_schema = fn(acc, state.tables[idx]), merged
+        with stage(state.stats, "materialize"):
+            rows = self._materialize(acc, acc_schema, max_matches=0)
         return rows, bool(jax.device_get(acc.overflow))
 
     # ------------------------------------------------------ execution phases
@@ -332,27 +337,37 @@ class SubgraphMatcher:
         return rows_old.astype(np.int64)
 
     def _match_once(
-        self, query: QueryGraph, plan: QueryPlan | None = None, **kw
+        self,
+        query: QueryGraph,
+        plan: QueryPlan | None = None,
+        retry_policy=None,  # fetch recovery is a sharded concern; accepted
+        # so the facade drives both engines uniformly
+        **kw,
     ) -> MatchResult:
         t0 = time.perf_counter()
         plan = plan or self.plan(query, **kw)
         stats = MatchStats(backend="local")
-        tables, schemas, overflow = self._explore(plan, stats)
+        with stage(stats, "explore"):
+            tables, schemas, overflow = self._explore(plan, stats)
+        if self.chaos is not None and self.chaos.forced_overflow():
+            overflow = True
 
         # ---- join phase ----------------------------------------------------
-        order = join_lib.select_join_order(schemas, stats.stwig_rows)
-        acc, acc_schema = tables[order[0]], schemas[order[0]]
-        for idx in order[1:]:
-            fn, merged = self._join_fn(
-                acc_schema, schemas[idx], plan.join_rows_cap,
-                plan.join_dup_cap,
-                int(acc.cols.shape[0]), int(tables[idx].cols.shape[0]),
-            )
-            acc, acc_schema = fn(acc, tables[idx]), merged
-        overflow |= bool(jax.device_get(acc.overflow))
+        with stage(stats, "join"):
+            order = join_lib.select_join_order(schemas, stats.stwig_rows)
+            acc, acc_schema = tables[order[0]], schemas[order[0]]
+            for idx in order[1:]:
+                fn, merged = self._join_fn(
+                    acc_schema, schemas[idx], plan.join_rows_cap,
+                    plan.join_dup_cap,
+                    int(acc.cols.shape[0]), int(tables[idx].cols.shape[0]),
+                )
+                acc, acc_schema = fn(acc, tables[idx]), merged
+            overflow |= bool(jax.device_get(acc.overflow))
 
         # ---- materialize (original ids, query-node column order) ----------
-        rows_old = self._materialize(acc, acc_schema, plan.max_matches)
+        with stage(stats, "materialize"):
+            rows_old = self._materialize(acc, acc_schema, plan.max_matches)
         stats.join_order = [tuple(schemas[i].qnodes) for i in order]
         stats.time_s = time.perf_counter() - t0
         stats.n_join_rows = int(acc.n_rows)

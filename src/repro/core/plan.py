@@ -71,6 +71,24 @@ class QueryPlan:
         return self.query.n_nodes
 
 
+def caps_from_plan(plan: QueryPlan, base: dict | None = None) -> dict:
+    """Recover the grow-able capacities from an already-made plan.
+
+    Used as the escalation seed when a caller passed an explicit ``plan``:
+    adaptive retries then double the plan's actual capacities instead of
+    silently restarting from the `make_plan` defaults (or, worse, not
+    retrying at all). Also how the streaming driver reports the caps a
+    stream ran at (``MatchStats.final_caps``)."""
+    caps = dict(base or {})
+    caps.setdefault(
+        "child_cap", max((s.child_cap for s in plan.specs), default=8)
+    )
+    caps.setdefault("join_rows_cap", plan.join_rows_cap)
+    caps.setdefault("join_dup_cap", plan.join_dup_cap)
+    caps.setdefault("max_matches", plan.max_matches)
+    return caps
+
+
 def _spec_for(
     stwig: STwig,
     bound_before: set[int],

@@ -23,6 +23,22 @@ class MatchStats:
     backend: str = "local"             # "local" | "sharded"
     time_s: float = 0.0
     retries: int = 0                   # adaptive capacity-growth re-runs
+    # why a partial result is partial — a `repro.runtime.resilience
+    # .DegradeReason` value string ("deadline" | "budget" |
+    # "overflow-ceiling" | "shard-fault"); None for complete results and
+    # for plain first-K truncation (adaptive=False is semantics, not
+    # degradation)
+    degrade_reason: str | None = None
+    # wall seconds per execution stage ("explore", "fetch", "join",
+    # "materialize"), accumulated across blocks on the streaming path
+    stage_times: dict[str, float] = dataclasses.field(default_factory=dict)
+    # per-shard health after chaos/fault handling: shard -> "ok" | "slow" |
+    # "dead" | "recovered" | "truncated" (sharded backend only)
+    shard_health: dict[int, str] = dataclasses.field(default_factory=dict)
+    # the grow-able capacities the final (possibly escalated) plan ran at
+    final_caps: dict[str, int] = dataclasses.field(default_factory=dict)
+    # fetch attempts beyond the first while recovering from shard faults
+    fetch_retries: int = 0
     rounds: list[int] = dataclasses.field(default_factory=list)
     stwig_rows: list[int] = dataclasses.field(default_factory=list)
     # matching roots per STwig; both backends populate it (sharded reports
@@ -52,6 +68,12 @@ class MatchResult:
     complete: bool            # False if any capacity overflowed (partial set)
     stats: MatchStats
 
+    @property
+    def degrade_reason(self) -> str | None:
+        """Typed reason this result is partial (None when complete or when
+        partial is first-K semantics, not degradation)."""
+        return self.stats.degrade_reason
+
 
 @dataclasses.dataclass
 class MatchPage:
@@ -60,6 +82,9 @@ class MatchPage:
     rows: np.ndarray          # (n_rows, n_qnodes) ORIGINAL node ids
     index: int                # 0-based page number
     complete: bool            # False if this page's block overflowed a cap
+    # the query-level stats object, shared by every page of one stream
+    # (retries, final caps, stage times, shard health accumulate there)
+    stats: "MatchStats | None" = None
 
     @property
     def n_rows(self) -> int:

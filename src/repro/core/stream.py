@@ -9,6 +9,12 @@ shard_map call on the sharded backend. This single loop replaces the two
 divergent ``match_stream`` implementations; abandoning the iterator early
 leaves all remaining blocks' joins unexecuted on either backend.
 (`repro.api.compiled` re-exports the driver and layers paging/limits on top.)
+
+The block boundary is also the stream's preemption point: a
+`repro.runtime.resilience.QueryGuard` passed as ``guard`` is checked
+before every block, and a tripped deadline ends the stream with one final
+degraded page (``complete=False``, the reason in the shared stats) — the
+pages already delivered stay valid, the remaining blocks are never joined.
 """
 from __future__ import annotations
 
@@ -16,7 +22,7 @@ from typing import Iterator
 
 import numpy as np
 
-from repro.core.plan import QueryPlan
+from repro.core.plan import QueryPlan, caps_from_plan
 from repro.core.query import QueryGraph
 from repro.core.result import MatchPage
 
@@ -27,6 +33,7 @@ def stream_blocks(
     plan: QueryPlan | None = None,
     *,
     block_rows: int = 1024,
+    guard=None,
     **engine_kw,
 ) -> Iterator[MatchPage]:
     """Yield one `MatchPage` per non-empty block of the blocked table.
@@ -38,25 +45,54 @@ def stream_blocks(
     remotely — Theorem 5 — so per-shard results stay disjoint too).
     Streaming is inherently first-K: there is no adaptive retry; a page
     whose block overflowed a capacity reports ``complete=False``.
+
+    Every page carries the stream's shared stats object: ``retries`` is 0
+    (no adaptive retry on this path) and ``final_caps`` reports the caps
+    the plan actually ran at — run/stream stats parity for consumers that
+    switch between the two.
     """
+    if guard is not None:
+        guard.start()
     state = engine._stream_setup(query, plan, **engine_kw)
+    stats = state.stats
+    stats.retries = 0
+    caps = caps_from_plan(state.plan)
+    stats.final_caps = {
+        k: caps[k] for k in ("child_cap", "join_rows_cap", "join_dup_cap")
+    }
     B = max(1, min(block_rows, state.cap))
     index = 0
     for lo in range(0, state.cap, B):
+        if guard is not None:
+            reason = guard.check()
+            if reason is not None:
+                if stats.degrade_reason is None:
+                    stats.degrade_reason = str(reason)
+                yield MatchPage(
+                    rows=np.zeros((0, state.plan.n_qnodes), np.int64),
+                    index=index,
+                    complete=False,
+                    stats=stats,
+                )
+                return
         rows, block_overflow = engine._stream_block(state, lo, B)
+        faulted = stats.degrade_reason is not None
         if rows.shape[0] == 0 and not block_overflow:
             continue
         yield MatchPage(
             rows=rows,
             index=index,
-            complete=not (state.explore_overflow or block_overflow),
+            complete=not (state.explore_overflow or block_overflow or faulted),
+            stats=stats,
         )
         index += 1
-    if index == 0 and state.explore_overflow:
-        # exploration overflowed and no block produced rows: without a page
-        # the incompleteness would be invisible to the consumer
+    if index == 0 and (state.explore_overflow or stats.degrade_reason is not None):
+        # exploration overflowed (or the fetch degraded) and no block
+        # produced rows: without a page the incompleteness would be
+        # invisible to the consumer
         yield MatchPage(
             rows=np.zeros((0, state.plan.n_qnodes), np.int64),
             index=0,
             complete=False,
+            stats=stats,
         )

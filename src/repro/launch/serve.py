@@ -35,9 +35,22 @@ def serve_stwig(args) -> None:
         q = dfs_query(g, rng, 6)
         if q is None:
             continue
-        res = session.run(q, max_matches=cfg.max_matches, adaptive=False)
+        res = session.run(
+            q,
+            max_matches=cfg.max_matches,
+            adaptive=False,
+            deadline_s=args.deadline_ms / 1e3 if args.deadline_ms else None,
+        )
         served += 1
-        print(f"  query served: {res.n_matches} matches in {res.stats.time_s*1e3:.0f} ms")
+        # a partial answer must say so (and why): first-K truncation has no
+        # degrade reason, a guard trip / shard fault carries a typed one
+        status = ""
+        if not res.complete:
+            status = f"  [partial: {res.stats.degrade_reason or 'overflow'}]"
+        print(
+            f"  query served: {res.n_matches} matches in "
+            f"{res.stats.time_s*1e3:.0f} ms{status}"
+        )
     print(f"{served} queries in {time.perf_counter()-t0:.1f}s "
           f"(cache: {session.cache.hits} hits / {session.cache.misses} misses)")
 
@@ -73,6 +86,9 @@ def main() -> None:
     ap.add_argument("--arch", default="stwig")
     ap.add_argument("--n-queries", type=int, default=10)
     ap.add_argument("--max-nodes", type=int, default=50_000)
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-query deadline (0 = none); expired queries "
+                    "return partial results marked [partial: deadline]")
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--smoke", action="store_true", default=True)

@@ -1,7 +1,33 @@
+from repro.runtime.chaos import (
+    ChaosConfig,
+    ChaosInjector,
+    ChaosKernels,
+    ShardFaultError,
+)
 from repro.runtime.fault_tolerance import (
     SimulatedPreemption,
     TrainSupervisor,
     elastic_restore,
+    straggler_update,
+)
+from repro.runtime.resilience import (
+    DegradeReason,
+    QueryGuard,
+    RetryPolicy,
+    adaptive_run,
 )
 
-__all__ = ["SimulatedPreemption", "TrainSupervisor", "elastic_restore"]
+__all__ = [
+    "ChaosConfig",
+    "ChaosInjector",
+    "ChaosKernels",
+    "DegradeReason",
+    "QueryGuard",
+    "RetryPolicy",
+    "ShardFaultError",
+    "SimulatedPreemption",
+    "TrainSupervisor",
+    "adaptive_run",
+    "elastic_restore",
+    "straggler_update",
+]

@@ -36,6 +36,25 @@ class SimulatedPreemption(RuntimeError):
     pass
 
 
+def straggler_update(
+    ewma: float | None, dt: float, factor: float
+) -> tuple[float, bool]:
+    """One step of straggler detection: compare ``dt`` against the EWMA of
+    the steps *before* it, then fold it in.
+
+    The comparison must use the previous EWMA: updating first lets the
+    straggling step drag the average toward itself and dampen its own
+    detection (with the default 0.1 update weight, a step must exceed
+    ``factor / (1 - 0.1 * factor)`` × the true baseline instead of
+    ``factor`` × — at factor 3, 4.3× instead of 3×). Returns
+    ``(new_ewma, straggling)``; the first step seeds the EWMA and is
+    never flagged (no baseline to compare against).
+    """
+    straggling = ewma is not None and dt > factor * ewma
+    new_ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+    return new_ewma, straggling
+
+
 @dataclasses.dataclass
 class TrainSupervisor:
     checkpointer: Checkpointer
@@ -76,8 +95,7 @@ class TrainSupervisor:
             state, metrics = step_fn(state, batch_fn(step), step)
             jax.block_until_ready(jax.tree.leaves(state)[0])
             dt = time.perf_counter() - t0
-            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
-            straggling = dt > self.straggler_factor * ewma
+            ewma, straggling = straggler_update(ewma, dt, self.straggler_factor)
             history.append(
                 {"step": step, "dt": dt, "straggler_flag": straggling, **{
                     k: float(v) for k, v in metrics.items()

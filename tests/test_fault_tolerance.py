@@ -106,3 +106,30 @@ def test_straggler_flagging(tmp_path):
     )
     flags = [h["step"] for h in hist if h["straggler_flag"]]
     assert 15 in flags
+
+
+def test_straggler_detection_is_not_self_dampened():
+    """Pinned regression test: the EWMA must be compared BEFORE folding the
+    new step in. The old update-then-compare order let a straggling step
+    drag the average toward itself: at factor 3 a 3.2x stall over a 0.1s
+    baseline went unflagged (threshold effectively ~4.3x)."""
+    from repro.runtime import straggler_update
+
+    # seed step: establishes the baseline, never flagged
+    ewma, flagged = straggler_update(None, 0.1, 3.0)
+    assert ewma == pytest.approx(0.1) and not flagged
+
+    # a 3.2x stall must be flagged ...
+    dt = 0.32
+    ewma2, flagged = straggler_update(ewma, dt, 3.0)
+    assert flagged
+    # ... and it IS the case the old order missed: after folding dt in,
+    # the dampened threshold exceeds the stall
+    dampened = 0.9 * ewma + 0.1 * dt
+    assert dt <= 3.0 * dampened
+    # the stall still joins the average afterwards (detection, not denial)
+    assert ewma2 == pytest.approx(dampened)
+
+    # steady state below the factor stays quiet
+    _, flagged = straggler_update(ewma2, 0.12, 3.0)
+    assert not flagged

@@ -1,0 +1,320 @@
+"""Resilience layer (repro.runtime.resilience): typed degradation, deadline
+and memory-budget guards, the cost-model-backed retry ceiling, and run/stream
+stats parity. Chaos-injected fault paths live in tests/test_chaos.py."""
+import numpy as np
+import pytest
+
+from helpers import dfs_query, nx_oracle
+from repro.api import GraphSession
+from repro.graphstore import generators
+from repro.runtime.resilience import (
+    DegradeReason,
+    QueryGuard,
+    RetryPolicy,
+    adaptive_run,
+    degraded_empty,
+    grow_caps,
+    plan_caps_bytes,
+    retry_ceiling_bytes,
+)
+
+
+def _graph(n=120, seed=3):
+    return generators.rmat(n, 4 * n, 4, seed=seed, symmetrize=True)
+
+
+# ---------------------------------------------------------------- vocabulary
+
+
+def test_degrade_reason_values_pinned():
+    # these strings are API: serve.py logs them, clients switch on them
+    assert DegradeReason.DEADLINE == "deadline"
+    assert DegradeReason.BUDGET == "budget"
+    assert DegradeReason.OVERFLOW_CEILING == "overflow-ceiling"
+    assert DegradeReason.SHARD_FAULT == "shard-fault"
+    assert str(DegradeReason.DEADLINE) == "deadline"
+
+
+# --------------------------------------------------------------------- guard
+
+
+def test_guard_deadline_fake_clock():
+    t = [0.0]
+    g = QueryGuard(deadline_s=1.0, clock=lambda: t[0]).start()
+    assert g.check() is None
+    assert g.remaining_s() == pytest.approx(1.0)
+    t[0] = 0.99
+    assert g.check() is None
+    t[0] = 1.01
+    assert g.check() is DegradeReason.DEADLINE
+    # start() is idempotent: re-entering keeps the original epoch
+    g.start()
+    assert g.started_at == 0.0
+
+
+def test_guard_memory_budget():
+    g = QueryGuard(memory_budget_bytes=1000.0).start()
+    assert g.check() is None  # no planned bytes, no deadline -> fine
+    assert g.check(planned_bytes=999.0) is None
+    assert g.check(planned_bytes=1001.0) is DegradeReason.BUDGET
+
+
+def test_guard_deadline_takes_priority():
+    t = [10.0]
+    g = QueryGuard(
+        deadline_s=1.0, memory_budget_bytes=1.0, clock=lambda: t[0]
+    ).start()
+    t[0] = 20.0
+    assert g.check(planned_bytes=1e9) is DegradeReason.DEADLINE
+
+
+# -------------------------------------------------------------------- policy
+
+
+def test_backoff_seeded_deterministic():
+    a = RetryPolicy(backoff_s=0.01, seed=7)
+    b = RetryPolicy(backoff_s=0.01, seed=7)
+    seq_a = [a.backoff(i) for i in range(6)]
+    seq_b = [b.backoff(i) for i in range(6)]
+    assert seq_a == seq_b
+    c = RetryPolicy(backoff_s=0.01, seed=8)
+    assert [c.backoff(i) for i in range(6)] != seq_a
+    # geometric growth dominates the jitter: attempt i+1 > attempt i
+    assert all(y > x for x, y in zip(seq_a, seq_a[1:]))
+
+
+def test_cost_estimate_monotone_in_caps():
+    caps = {"child_cap": 8, "join_rows_cap": 1 << 14, "join_dup_cap": 64}
+    est = [plan_caps_bytes(caps)]
+    for _ in range(3):
+        caps = grow_caps(caps)
+        est.append(plan_caps_bytes(caps))
+    assert all(e > 0 for e in est)
+    assert all(b > a for a, b in zip(est, est[1:]))
+
+
+def test_retry_ceiling_reads_budgets_json():
+    # the checked-in ceiling (analysis/budgets.json "retry" section)
+    assert retry_ceiling_bytes() == 16e9
+    # missing section falls back conservatively instead of failing open
+    assert retry_ceiling_bytes({}) == 4e9
+    assert retry_ceiling_bytes({"retry": {"memory_ceiling_bytes": 123.0}}) == 123.0
+
+
+def test_next_caps_never_exceeds_ceiling():
+    # acceptance: adaptive retry never plans caps whose cost-model estimate
+    # exceeds the ceiling -- walk escalations until refusal and check each
+    caps = {"child_cap": 8, "join_rows_cap": 1 << 14, "join_dup_cap": 64}
+    ceiling = plan_caps_bytes(grow_caps(grow_caps(caps))) * 1.01
+    policy = RetryPolicy(ceiling_bytes=ceiling)
+    accepted = []
+    for _ in range(10):
+        grown, reason = policy.next_caps(caps)
+        if grown is None:
+            assert reason is DegradeReason.OVERFLOW_CEILING
+            break
+        accepted.append(grown)
+        caps = grown
+    else:
+        pytest.fail("next_caps never hit the ceiling")
+    assert len(accepted) == 2  # exactly the escalations under the ceiling
+    assert all(plan_caps_bytes(c) <= ceiling for c in accepted)
+
+
+def test_next_caps_guard_budget_wins_over_ceiling():
+    caps = {"child_cap": 8, "join_rows_cap": 1 << 14, "join_dup_cap": 64}
+    g = QueryGuard(memory_budget_bytes=1.0).start()
+    grown, reason = RetryPolicy(ceiling_bytes=float("inf")).next_caps(caps, g)
+    assert grown is None and reason is DegradeReason.BUDGET
+
+
+# --------------------------------------------------------------- retry loop
+
+
+def _overflowing(n_qnodes=3, backend="local"):
+    """A first/escalate pair that never completes, recording escalated caps."""
+    from repro.core.result import MatchResult, MatchStats
+
+    seen = []
+
+    def make(caps):
+        seen.append(dict(caps) if caps else None)
+        return MatchResult(
+            rows=np.zeros((0, n_qnodes), np.int64),
+            n_matches=0,
+            complete=False,
+            stats=MatchStats(backend=backend),
+        )
+
+    return (lambda: make(None)), (lambda caps: make(caps)), seen
+
+
+def test_adaptive_run_stops_at_ceiling_with_typed_reason():
+    first, escalate, seen = _overflowing()
+    caps = {"child_cap": 8, "join_rows_cap": 1 << 14, "join_dup_cap": 64}
+    ceiling = plan_caps_bytes(grow_caps(caps)) * 1.01
+    res = adaptive_run(
+        first,
+        escalate,
+        caps,
+        n_qnodes=3,
+        backend="local",
+        policy=RetryPolicy(ceiling_bytes=ceiling),
+    )
+    assert not res.complete
+    assert res.stats.degrade_reason == "overflow-ceiling"
+    assert res.stats.retries == 1
+    # every escalated plan's estimate fit under the ceiling (acceptance)
+    escalated = [c for c in seen if c is not None]
+    assert len(escalated) == 1
+    assert all(plan_caps_bytes(c) <= ceiling for c in escalated)
+    assert res.stats.final_caps == {
+        k: escalated[-1][k]
+        for k in ("child_cap", "join_rows_cap", "join_dup_cap")
+    }
+
+
+def test_adaptive_run_exhausts_retry_budget():
+    first, escalate, seen = _overflowing()
+    res = adaptive_run(
+        first,
+        escalate,
+        {"child_cap": 8, "join_rows_cap": 1 << 14, "join_dup_cap": 64},
+        n_qnodes=3,
+        backend="local",
+        policy=RetryPolicy(max_retries=2, ceiling_bytes=float("inf")),
+    )
+    assert res.stats.degrade_reason == "overflow-ceiling"
+    assert res.stats.retries == 2
+    assert len(seen) == 3  # first + two escalations
+
+
+def test_adaptive_run_respects_existing_degrade_reason():
+    # a shard fault is not a capacity problem: no escalation may fire
+    from repro.core.result import MatchResult, MatchStats
+
+    def first():
+        stats = MatchStats(backend="sharded")
+        stats.degrade_reason = DegradeReason.SHARD_FAULT.value
+        return MatchResult(
+            rows=np.zeros((0, 3), np.int64),
+            n_matches=0,
+            complete=False,
+            stats=stats,
+        )
+
+    def escalate(caps):
+        pytest.fail("shard-fault result must not trigger cap escalation")
+
+    res = adaptive_run(
+        first, escalate, {"child_cap": 8}, n_qnodes=3, backend="sharded"
+    )
+    assert res.stats.degrade_reason == "shard-fault"
+    assert res.stats.retries == 0
+
+
+def test_degraded_empty_shape():
+    res = degraded_empty(5, "local", DegradeReason.BUDGET)
+    assert res.rows.shape == (0, 5)
+    assert not res.complete
+    assert res.stats.degrade_reason == "budget"
+    assert res.degrade_reason == "budget"  # MatchResult property delegates
+
+
+# --------------------------------------------------------- facade end-to-end
+
+
+def test_pre_expired_deadline_returns_degraded_empty():
+    g = _graph()
+    with GraphSession.open(g, backend="local") as s:
+        rng = np.random.default_rng(0)
+        q = dfs_query(g, rng, 3)
+        assert q is not None
+        res = s.run(q, deadline_s=0.0)
+    assert not res.complete
+    assert res.stats.degrade_reason == "deadline"
+    assert res.n_matches == 0
+
+
+def test_memory_budget_refused_at_admission():
+    g = _graph()
+    with GraphSession.open(g, backend="local") as s:
+        rng = np.random.default_rng(0)
+        q = dfs_query(g, rng, 3)
+        assert q is not None
+        res = s.run(q, memory_budget_bytes=1000.0)
+    assert not res.complete
+    assert res.stats.degrade_reason == "budget"
+    assert res.n_matches == 0
+
+
+def test_clean_run_unaffected_by_generous_guard():
+    g = _graph()
+    with GraphSession.open(g, backend="local") as s:
+        rng = np.random.default_rng(1)
+        q = dfs_query(g, rng, 3)
+        assert q is not None
+        res = s.run(q, deadline_s=300.0, memory_budget_bytes=64e9)
+        assert res.complete
+        assert res.stats.degrade_reason is None
+        assert set(map(tuple, res.rows.tolist())) == nx_oracle(g, q)
+        # per-stage timings were recorded at the host boundaries
+        assert {"explore", "join", "materialize"} <= set(
+            res.stats.stage_times
+        )
+        assert all(t >= 0 for t in res.stats.stage_times.values())
+
+
+def test_run_stream_stats_parity():
+    # satellite: retries + final caps surface identically through run() and
+    # stream() pages (adaptive=False -- streaming never escalates, so the
+    # comparable run is the first-K one)
+    g = _graph(seed=5)
+    with GraphSession.open(g, backend="local") as s:
+        rng = np.random.default_rng(2)
+        q = dfs_query(g, rng, 3)
+        assert q is not None
+        res = s.run(q, adaptive=False)
+        pages = list(s.stream(q, page_size=64))
+        assert pages, "stream produced no pages"
+        st = pages[0].stats
+        assert st is not None
+        assert all(p.stats is st for p in pages)  # one shared stats object
+        assert st.retries == res.stats.retries == 0
+        assert st.final_caps == res.stats.final_caps
+        assert {"explore", "join"} <= set(st.stage_times)
+        got = [r for p in pages for r in map(tuple, p.rows.tolist())]
+        assert set(got) == set(map(tuple, res.rows.tolist()))
+
+
+def test_stream_deadline_ends_with_degraded_page():
+    g = _graph()
+    with GraphSession.open(g, backend="local") as s:
+        rng = np.random.default_rng(3)
+        q = dfs_query(g, rng, 3)
+        assert q is not None
+        t = [0.0]
+        guard = QueryGuard(deadline_s=1.0, clock=lambda: t[0])
+        calls0 = s.engine.join_block_calls
+        # caps big enough that the stream is complete (streaming never
+        # escalates); page_size=1 so the first page yields after the first
+        # non-empty block, leaving the rest pending behind the guard
+        cq = s.compile(q, child_cap=32, join_rows_cap=1 << 18)
+        stream = cq.stream(page_size=1, block_rows=4, guard=guard)
+        first = next(stream)
+        t[0] = 2.0  # expire mid-stream
+        rest = list(stream)
+        assert rest, "expired guard must surface a final degraded page"
+        last = rest[-1]
+        assert not last.complete
+        assert last.stats.degrade_reason == "deadline"
+        # pages already delivered stay valid rows of the true result
+        oracle = nx_oracle(g, q)
+        assert set(map(tuple, first.rows.tolist())) <= oracle
+        # remaining blocks were never joined: strictly fewer join calls
+        # than a full consumption of the same stream
+        partial_calls = s.engine.join_block_calls - calls0
+        full = list(cq.stream(page_size=16, block_rows=4))
+        full_calls = s.engine.join_block_calls - calls0 - partial_calls
+        assert sum(p.rows.shape[0] for p in full) == len(oracle)
+        assert partial_calls < full_calls
