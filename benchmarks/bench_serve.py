@@ -1,0 +1,196 @@
+"""Continuous-batching serving vs the sequential baseline (DESIGN.md §7).
+
+Two ways of answering the same workload on the same session:
+
+  * **sequential** — the pre-server `launch/serve.py` loop: one
+    ``session.run(q, max_matches=K, adaptive=False)`` at a time, each
+    query joining its full blocked table before the next starts;
+  * **server** — `QueryServer` under a Poisson open-loop load generator:
+    queries arrive on exponential gaps regardless of completion (open
+    loop), up to ``max_inflight`` streams stay in flight, and the
+    scheduler interleaves block-join quanta, stopping each stream at its
+    first-K budget — blocks past the budget are never joined.
+
+Reported rows (``name,us_per_call,derived``):
+
+  * ``serve_seq_query``   — us per query, sequential baseline (+ qps)
+  * ``serve_cb_query``    — us per query through the server (+ qps and
+    the speedup over sequential at the configured in-flight depth)
+  * ``serve_cb_ttfp_p50`` / ``serve_cb_ttfp_p99`` — time-to-first-page
+    percentiles (submission -> first non-empty page, queue wait included)
+    against the configured per-query deadline
+  * ``serve_cb_outcomes`` — served/partial/failed split and the global
+    degradation count (the serving SLO: per-query degradation only)
+
+``--hist-out PATH`` writes the full latency histogram (per-query ttfp and
+wall lists, percentiles, scheduler counters) as JSON — the artifact the CI
+``serve`` job uploads.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def _percentile(sorted_ms: "np.ndarray", q: float) -> float:
+    if len(sorted_ms) == 0:
+        return float("nan")
+    return float(sorted_ms[min(len(sorted_ms) - 1, int(len(sorted_ms) * q))])
+
+
+def _build_workload(session, g, n_queries: int, n_shapes: int, first_k, rng):
+    """``n_queries`` path queries drawn from ``n_shapes`` distinct label
+    shapes — a serving mix where most arrivals hit an already-warm shape
+    bucket, the way production query workloads repeat templates.
+
+    Streams never escalate capacities, so every shape is vetted up front:
+    one complete-at-fixed-caps run (shapes that overflow are discarded —
+    each vetting run is a fresh jit compile, so one uniform cap config is
+    tried rather than a doubling walk). Both the sequential baseline and
+    the server then run at those caps."""
+    from repro.workloads import path_query
+
+    caps = {"child_cap": 32}
+    shapes = []
+    for _ in range(12):
+        if len(shapes) >= n_shapes:
+            break
+        q = path_query(g, rng, 4)
+        if q is None:
+            continue
+        r = session.run(q, max_matches=first_k, adaptive=False, **caps)
+        if r.complete and r.n_matches >= first_k:
+            shapes.append((q, caps))
+    if not shapes:
+        raise RuntimeError("no completable query shape found on this graph")
+    return [shapes[i % len(shapes)] for i in range(n_queries)]
+
+
+def main(smoke: bool = False, hist_out: "str | None" = None) -> None:
+    import jax  # noqa: F401  (device init before timing)
+
+    from repro.api import GraphSession, summarize_outcomes
+    from repro.graphstore import generators
+
+    if smoke:
+        n_nodes, n_edges, n_labels = 4_000, 24_000, 16
+        n_queries, n_shapes = 24, 3
+    else:
+        n_nodes, n_edges, n_labels = 30_000, 180_000, 24
+        n_queries, n_shapes = 64, 4
+    first_k = 64
+    max_inflight = 8
+    block_rows = 256
+    deadline_s = 90.0 if smoke else 180.0
+
+    g = generators.rmat(n_nodes, n_edges, n_labels, seed=7, symmetrize=True)
+    session = GraphSession.open(g, backend="local")
+    rng = np.random.default_rng(13)
+    workload = _build_workload(session, g, n_queries, n_shapes, first_k, rng)
+
+    # warm every shape's executables once so both paths measure steady
+    # state, not jit compiles (the session cache is shared by both)
+    for q, caps in workload[:n_shapes]:
+        session.run(q, max_matches=first_k, adaptive=False, **caps)
+        for _ in session.stream(q, page_size=first_k, max_matches=first_k,
+                                block_rows=block_rows, **caps):
+            pass
+
+    # ---- sequential baseline (the pre-server launch/serve.py loop) ------
+    seq_lat = []
+    t0 = time.perf_counter()
+    for q, caps in workload:
+        s = time.perf_counter()
+        session.run(q, max_matches=first_k, adaptive=False, **caps)
+        seq_lat.append(time.perf_counter() - s)
+    seq_wall = time.perf_counter() - t0
+    seq_qps = len(workload) / seq_wall
+
+    # ---- continuous batching under Poisson open-loop arrivals -----------
+    # offered load deliberately exceeds even the server's capacity (the
+    # overload case continuous batching exists for), so the in-flight set
+    # saturates at max_inflight and measured qps is true throughput; the
+    # open loop keeps submitting on exponential gaps regardless of
+    # completions, and queue wait counts against each query's deadline
+    rate = 128.0 * seq_qps
+    gaps = rng.exponential(1.0 / rate, size=len(workload))
+    server = session.serve(
+        max_inflight=max_inflight,
+        block_rows=block_rows,
+        max_matches=first_k,
+        deadline_s=deadline_s,
+    )
+    with server:
+        t0 = time.perf_counter()
+        tickets = []
+        for (q, caps), gap in zip(workload, gaps):
+            time.sleep(float(gap))
+            tickets.append(server.submit(q, **caps))
+        outcomes = [t.result(timeout=600) for t in tickets]
+        cb_wall = time.perf_counter() - t0
+    cb_qps = len(workload) / cb_wall
+
+    ttfp_ms = np.sort([o.ttfp_s * 1e3 for o in outcomes if o.ttfp_s is not None])
+    wall_ms = np.sort([o.wall_s * 1e3 for o in outcomes])
+    p50, p99 = _percentile(ttfp_ms, 0.50), _percentile(ttfp_ms, 0.99)
+    split = summarize_outcomes(outcomes)
+    speedup = cb_qps / seq_qps
+
+    print(f"serve_seq_query,{seq_wall/len(workload)*1e6:.1f},"
+          f"qps={seq_qps:.2f}")
+    print(f"serve_cb_query,{cb_wall/len(workload)*1e6:.1f},"
+          f"qps={cb_qps:.2f} speedup={speedup:.2f}x inflight={max_inflight}")
+    print(f"serve_cb_ttfp_p50,{p50*1e3:.1f},n={len(ttfp_ms)}")
+    print(f"serve_cb_ttfp_p99,{p99*1e3:.1f},"
+          f"deadline_ms={deadline_s*1e3:.0f} "
+          f"under_deadline={bool(p99 < deadline_s * 1e3)}")
+    print(f"serve_cb_outcomes,{server.stats.join_quanta},"
+          f"served={split['served']} partial={split['partial']} "
+          f"failed={split['failed']} "
+          f"global_degradations={server.stats.global_degradations} "
+          f"warm_admissions={server.stats.warm_admissions} "
+          f"peak_inflight={server.stats.peak_inflight}")
+
+    if hist_out:
+        doc = {
+            "smoke": smoke,
+            "workload": {
+                "n_queries": len(workload), "n_shapes": n_shapes,
+                "first_k": first_k, "graph_nodes": n_nodes,
+                "graph_edges": n_edges,
+            },
+            "config": {
+                "max_inflight": max_inflight, "block_rows": block_rows,
+                "deadline_ms": deadline_s * 1e3,
+                "offered_qps": rate,
+            },
+            "sequential": {
+                "qps": seq_qps,
+                "lat_ms": [t * 1e3 for t in seq_lat],
+            },
+            "server": {
+                "qps": cb_qps,
+                "speedup": speedup,
+                "ttfp_ms": ttfp_ms.tolist(),
+                "wall_ms": wall_ms.tolist(),
+                "p50_ttfp_ms": p50,
+                "p99_ttfp_ms": p99,
+                "outcomes": split,
+                "stats": server.stats.as_dict(),
+            },
+        }
+        with open(hist_out, "w") as f:
+            json.dump(doc, f, indent=2)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graph/workload (the CI serve job)")
+    ap.add_argument("--hist-out", type=str, default=None,
+                    help="write the latency-histogram JSON here")
+    args = ap.parse_args()
+    main(smoke=args.smoke, hist_out=args.hist_out)

@@ -19,6 +19,7 @@ an artifact on every run.
  Fig 10(d) (label density)            bench_label_density
  §Roofline (this brief)               bench_roofline
  Kernel backends (DESIGN.md §3)       bench_kernels
+ Serving (DESIGN.md §7)               bench_serve
 """
 from __future__ import annotations
 
@@ -83,6 +84,7 @@ def main() -> None:
         bench_loadset,
         bench_query_size,
         bench_roofline,
+        bench_serve,
         bench_speedup,
         bench_stream,
     )
@@ -101,6 +103,8 @@ def main() -> None:
         "loadset": bench_loadset.main,
         "roofline": bench_roofline.main,
         "kernels": bench_kernels.main,
+        "serve": (lambda: bench_serve.main(smoke=True)) if args.fast
+        else bench_serve.main,
     }
     def _gc():
         # each query spec jit-compiles a fresh executable; without clearing,

@@ -10,13 +10,24 @@ One entry point over both engines, with an explicit compile/run split::
     for page in cq.stream(page_size=256):           # pipelined first-K
         ...
     results = sess.run_batch(queries)               # amortized compiles
+    outcomes = sess.serve(max_inflight=8).serve(qs) # continuous batching
 
 `GraphSession` selects and wraps the right engine (`SubgraphMatcher` or
 `DistributedMatcher`), owns the keyed `ExecutableCache` that used to hide in
 module-level ``lru_cache`` state, and returns typed `MatchResult` /
-`MatchStats` objects instead of raw dicts.
+`MatchStats` objects instead of raw dicts. Serving many users from one
+device program is `repro.api.serve` (`QueryServer` et al., re-exported
+here); `__all__` below IS the public surface — anything else is internal.
 """
 from repro.api.compiled import CompiledQuery
+from repro.api.serve import (
+    QueryOutcome,
+    QueryServer,
+    ServerConfig,
+    ServerStats,
+    Ticket,
+    summarize_outcomes,
+)
 from repro.api.session import GraphSession
 from repro.core.cache import ExecutableCache
 from repro.core.result import MatchPage, MatchResult, MatchStats
@@ -28,4 +39,10 @@ __all__ = [
     "MatchResult",
     "MatchStats",
     "MatchPage",
+    "QueryServer",
+    "ServerConfig",
+    "ServerStats",
+    "QueryOutcome",
+    "Ticket",
+    "summarize_outcomes",
 ]

@@ -1,0 +1,42 @@
+"""`repro.api.serve` — the public serving surface (DESIGN.md §7).
+
+Serving is a first-class facade concern now, not a launcher loop: a
+`QueryServer` opened over a `GraphSession` continuously batches block-join
+quanta from many in-flight queries on one device, shares traced
+executables across shape-bucketed queries via the session's
+`ExecutableCache`, and degrades per query (deadline / first-K budget /
+fault) — never globally::
+
+    from repro.api import GraphSession
+    from repro.api.serve import ServerConfig
+
+    session = GraphSession.open(graph)
+    outcomes = session.serve(max_inflight=8, deadline_s=0.5).serve(queries)
+
+    with session.serve() as server:          # open-loop: scheduler thread
+        ticket = server.submit(query, max_matches=256)
+        outcome = ticket.result()            # QueryOutcome: status + result
+
+Everything here is a re-export of `repro.runtime.server`, which holds the
+implementation; this module IS the supported import path (alongside the
+top-level `repro.api` names).
+"""
+from repro.runtime.server import (
+    QueryOutcome,
+    QueryServer,
+    ServerConfig,
+    ServerStats,
+    Ticket,
+    bucket_key,
+    summarize_outcomes,
+)
+
+__all__ = [
+    "QueryOutcome",
+    "QueryServer",
+    "ServerConfig",
+    "ServerStats",
+    "Ticket",
+    "bucket_key",
+    "summarize_outcomes",
+]

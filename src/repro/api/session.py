@@ -14,6 +14,7 @@ import numpy as np
 from repro.api.compiled import CompiledQuery
 from repro.core.backend import Kernels, resolve_kernels
 from repro.core.cache import ExecutableCache
+from repro.core.deprecation import facade_construction
 from repro.core.engine import SubgraphMatcher
 from repro.core.plan import QueryPlan
 from repro.core.query import QueryGraph
@@ -109,7 +110,10 @@ class GraphSession:
                     f"local backend needs a 1-shard partition, got {pg.n_shards} "
                     "shards (use backend='sharded' or re-partition)"
                 )
-            engine = SubgraphMatcher(pg, cache=cache, kernels=kern, chaos=chaos)
+            with facade_construction():
+                engine = SubgraphMatcher(
+                    pg, cache=cache, kernels=kern, chaos=chaos
+                )
         else:
             from jax.sharding import Mesh
 
@@ -121,9 +125,10 @@ class GraphSession:
                         f"sharded backend needs ≥{pg.n_shards} devices, have {n_dev}"
                     )
                 mesh = Mesh(np.array(jax.devices()[: pg.n_shards]), ("data",))
-            engine = DistributedMatcher(
-                pg, mesh, cache=cache, kernels=kern, chaos=chaos
-            )
+            with facade_construction():
+                engine = DistributedMatcher(
+                    pg, mesh, cache=cache, kernels=kern, chaos=chaos
+                )
         return cls(pg, engine, backend, cache)
 
     # ----------------------------------------------------------- query API
@@ -181,6 +186,25 @@ class GraphSession:
             deadline_s=deadline_s,
             **(engine_kw or {}),
         )
+
+    def serve(self, **cfg) -> "QueryServer":
+        """Open a continuous-batching `QueryServer` over this session
+        (DESIGN.md §7). ``cfg`` keywords are `ServerConfig` fields::
+
+            server = session.serve(max_inflight=8, deadline_s=0.5)
+            outcomes = server.serve(queries)       # synchronous batch
+            with session.serve() as srv:           # background scheduler
+                t = srv.submit(q)
+                out = t.result()
+
+        Concurrent queries with identical plan shapes share one traced
+        executable via this session's `ExecutableCache`; the server
+        interleaves their block joins on the one device and enforces
+        per-query deadlines/budgets so overload degrades per query, never
+        globally."""
+        from repro.runtime.server import QueryServer, ServerConfig
+
+        return QueryServer(self, ServerConfig(**cfg))
 
     def run_batch(
         self,

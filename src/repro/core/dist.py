@@ -35,6 +35,7 @@ from repro.core import join as join_lib
 from repro.core.backend import Kernels, resolve_kernels
 from repro.core.cache import ExecutableCache
 from repro.core.collectives import fetch_load_set, or_allreduce
+from repro.core.deprecation import warn_direct_construction
 from repro.core.match import Bindings, ShardGraph, match_stwig_shard
 from repro.core.plan import QueryPlan, STwigSpec, caps_from_plan, make_plan
 from repro.core.query import QueryGraph
@@ -107,6 +108,7 @@ class DistributedMatcher:
     chaos: object = None
 
     def __post_init__(self):
+        warn_direct_construction("DistributedMatcher")
         assert self.mesh.devices.size == self.pg.n_shards, (
             self.mesh.devices.size,
             self.pg.n_shards,
@@ -575,6 +577,7 @@ class DistributedMatcher:
             block_rows,
         )
         self.join_block_calls += 1
+        state.stats.join_blocks += 1
         with stage(state.stats, "join"):
             cols, valid, n_rows, ovf = jfn(
                 state.head_cols,

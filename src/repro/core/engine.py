@@ -24,6 +24,7 @@ import numpy as np
 from repro.core import join as join_lib
 from repro.core.backend import Kernels, resolve_kernels
 from repro.core.cache import ExecutableCache
+from repro.core.deprecation import warn_direct_construction
 from repro.core.match import (
     Bindings,
     ShardGraph,
@@ -95,6 +96,7 @@ class SubgraphMatcher:
         kernels: "str | Kernels | None" = None,
         chaos=None,
     ):
+        warn_direct_construction("SubgraphMatcher")
         assert 0 <= shard < pg.n_shards
         self.pg = pg
         self.cache = cache if cache is not None else ExecutableCache()
@@ -235,6 +237,11 @@ class SubgraphMatcher:
         if self.chaos is not None and self.chaos.forced_overflow():
             explore_overflow = True
         order = tuple(join_lib.select_join_order(schemas, stats.stwig_rows))
+        # probe-side compaction: every block join re-probes the non-blocked
+        # tables, and probe cost scales with their capacity, not their row
+        # count — shrink them once here (setup is already host-synced)
+        for idx in order[1:]:
+            tables[idx] = join_lib.compact_table(tables[idx])
         first = tables[order[0]]
         return _LocalStreamState(
             plan=plan,
@@ -263,6 +270,7 @@ class SubgraphMatcher:
         first = state.tables[state.order[0]]
         blk = join_lib.block_table(first, lo, block_rows)
         self.join_block_calls += 1
+        state.stats.join_blocks += 1
         with stage(state.stats, "join"):
             acc, acc_schema = blk, state.schemas[state.order[0]]
             for idx in state.order[1:]:

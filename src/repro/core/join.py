@@ -190,6 +190,41 @@ def block_table(table: JoinTable, lo, block_rows: int) -> JoinTable:
     )
 
 
+def compact_table(table: JoinTable, min_cap: int = 64) -> JoinTable:
+    """Squeeze a table's valid rows to the front and shrink its capacity to
+    the smallest power of two that holds them all (host-side; costs one
+    device round-trip, so callers must already be off the async path).
+
+    STwig tables are allocated at worst-case capacity but are usually
+    sparse, and the probe side of every join pays O(cap × dup_cap) in
+    window expansion and scatter regardless of how many rows are real.
+    The streaming path re-probes the same tables once per block, so the
+    setup step compacts them once and every block join gets cheaper.
+    Lossless by construction: the compact capacity covers every valid row
+    and the exact-count/overflow flags are carried over unchanged. The
+    one-shot path stays fully on device and keeps full-capacity tables.
+    """
+    cols = np.asarray(table.cols)
+    valid = np.asarray(table.valid)
+    keep = np.nonzero(valid)[0]
+    cap = int(cols.shape[0])
+    new_cap = min_cap
+    while new_cap < len(keep):
+        new_cap *= 2
+    if new_cap >= cap:
+        return table
+    out_cols = np.zeros((new_cap, cols.shape[1]), cols.dtype)
+    out_cols[: len(keep)] = cols[keep]
+    out_valid = np.zeros((new_cap,), bool)
+    out_valid[: len(keep)] = True
+    return JoinTable(
+        cols=jnp.asarray(out_cols),
+        valid=jnp.asarray(out_valid),
+        n_rows=table.n_rows,
+        overflow=table.overflow,
+    )
+
+
 def select_join_order(
     schemas: list[Schema], counts: list[int], start: int | None = None
 ) -> list[int]:

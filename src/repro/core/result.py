@@ -2,13 +2,16 @@
 
 The engines used to report execution details in an untyped ``stats`` dict;
 these dataclasses make the schema explicit. ``MatchStats`` still supports
-``stats["key"]`` access as a deprecation bridge for pre-facade callers.
+``stats["key"]`` access as a deprecation bridge for pre-facade callers —
+it now emits `DeprecationWarning` on every use.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+from repro.core.deprecation import warn_dict_stats_access
 
 
 @dataclasses.dataclass
@@ -39,6 +42,11 @@ class MatchStats:
     final_caps: dict[str, int] = dataclasses.field(default_factory=dict)
     # fetch attempts beyond the first while recovering from shard faults
     fetch_retries: int = 0
+    # block-parameterized join steps this query executed on the streaming
+    # path (0 on one-shot runs); per-query — the engines' cumulative
+    # `join_block_calls` counters sum these across all streams. The query
+    # server's scheduler accounts its join quanta with this field.
+    join_blocks: int = 0
     rounds: list[int] = dataclasses.field(default_factory=list)
     stwig_rows: list[int] = dataclasses.field(default_factory=list)
     # matching roots per STwig; both backends populate it (sharded reports
@@ -50,14 +58,17 @@ class MatchStats:
     cache_hits: int = 0
     cache_misses: int = 0
 
-    # -------- deprecation bridge: the old dict-style access keeps working
+    # -------- deprecation bridge: the old dict-style access keeps working,
+    # but warns — `tests/test_api.py` pins the warning
     def __getitem__(self, key: str):
+        warn_dict_stats_access(key)
         try:
             return getattr(self, key)
         except AttributeError:
             raise KeyError(key) from None
 
     def get(self, key: str, default=None):
+        warn_dict_stats_access(key)
         return getattr(self, key, default)
 
 

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import GraphSession
+from repro.api import GraphSession, summarize_outcomes
 from repro.configs import get
 from repro.configs.base import LMConfig
 from repro.graphstore import generators
@@ -28,31 +28,34 @@ def serve_stwig(args) -> None:
     g = generators.rmat(n, cfg.avg_degree * n, cfg.n_labels, seed=0)
     session = GraphSession.open(g, backend="local")
     rng = np.random.default_rng(0)
+    workload = [q for q in (dfs_query(g, rng, 6) for _ in range(args.n_queries))
+                if q is not None]
 
-    served = 0
+    server = session.serve(
+        max_inflight=args.max_inflight,
+        max_matches=cfg.max_matches,
+        deadline_s=args.deadline_ms / 1e3 if args.deadline_ms else None,
+    )
     t0 = time.perf_counter()
-    for _ in range(args.n_queries):
-        q = dfs_query(g, rng, 6)
-        if q is None:
-            continue
-        res = session.run(
-            q,
-            max_matches=cfg.max_matches,
-            adaptive=False,
-            deadline_s=args.deadline_ms / 1e3 if args.deadline_ms else None,
-        )
-        served += 1
+    outcomes = server.serve(workload)
+    wall = time.perf_counter() - t0
+    for o in outcomes:
         # a partial answer must say so (and why): first-K truncation has no
         # degrade reason, a guard trip / shard fault carries a typed one
         status = ""
-        if not res.complete:
-            status = f"  [partial: {res.stats.degrade_reason or 'overflow'}]"
-        print(
-            f"  query served: {res.n_matches} matches in "
-            f"{res.stats.time_s*1e3:.0f} ms{status}"
-        )
-    print(f"{served} queries in {time.perf_counter()-t0:.1f}s "
-          f"(cache: {session.cache.hits} hits / {session.cache.misses} misses)")
+        if o.status != "served":
+            status = f"  [{o.status}: {o.stats.degrade_reason or o.error or 'overflow'}]"
+        ttfp = "-" if o.ttfp_s is None else f"{o.ttfp_s*1e3:.0f} ms"
+        print(f"  {o.n_matches} matches, first page in {ttfp}{status}")
+    # a query counts as served only when it completed cleanly — guard
+    # trips/overflows are partial, per-query exceptions are failed
+    s = summarize_outcomes(outcomes)
+    print(f"{s['served']} served / {s['partial']} partial / {s['failed']} "
+          f"failed in {wall:.1f}s "
+          f"({len(outcomes)/wall:.2f} qps over {server.stats.join_quanta} "
+          f"block-join quanta, {server.stats.global_degradations} global "
+          f"degradations; cache: {session.cache.hits} hits / "
+          f"{session.cache.misses} misses)")
 
 
 def serve_lm(args) -> None:
@@ -89,6 +92,9 @@ def main() -> None:
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="per-query deadline (0 = none); expired queries "
                     "return partial results marked [partial: deadline]")
+    ap.add_argument("--max-inflight", type=int, default=8,
+                    help="concurrent queries the server interleaves "
+                    "block-join quanta across (continuous batching)")
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--smoke", action="store_true", default=True)

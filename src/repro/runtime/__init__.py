@@ -16,6 +16,14 @@ from repro.runtime.resilience import (
     RetryPolicy,
     adaptive_run,
 )
+from repro.runtime.server import (
+    QueryOutcome,
+    QueryServer,
+    ServerConfig,
+    ServerStats,
+    Ticket,
+    summarize_outcomes,
+)
 
 __all__ = [
     "ChaosConfig",
@@ -23,11 +31,17 @@ __all__ = [
     "ChaosKernels",
     "DegradeReason",
     "QueryGuard",
+    "QueryOutcome",
+    "QueryServer",
     "RetryPolicy",
+    "ServerConfig",
+    "ServerStats",
     "ShardFaultError",
     "SimulatedPreemption",
+    "Ticket",
     "TrainSupervisor",
     "adaptive_run",
     "elastic_restore",
     "straggler_update",
+    "summarize_outcomes",
 ]
