@@ -63,9 +63,10 @@ def main() -> None:
 
     # ---- candidate filter / stwig_expand ----------------------------------
     E, cap, n_total, C = 1 << 15, 4096, n_bits - 1, 4
-    src = jnp.asarray(np.sort(rng.integers(0, cap, E)).astype(np.int32))
-    seg_start = jnp.asarray(
-        np.searchsorted(np.asarray(src), np.asarray(src), side="left"), jnp.int32
+    src = np.sort(rng.integers(0, cap, E)).astype(np.int32)
+    # (cap+2,) CSR bounds over the edge arrays; indptr[cap+1] == E
+    indptr = jnp.asarray(
+        np.searchsorted(src, np.arange(cap + 2)).astype(np.int32)
     )
     dst = jnp.asarray(rng.integers(0, n_total, E), jnp.int32)
     labs = jnp.asarray(rng.integers(0, 8, E), jnp.int32)
@@ -84,8 +85,7 @@ def main() -> None:
             words_k,
             dst,
             labs,
-            src,
-            seg_start,
+            indptr,
             rok,
             child_labels=(3, 5),
             child_bound=(True, False),

@@ -1,0 +1,86 @@
+"""Diff a fresh bench snapshot against a committed baseline and fail on
+regressions.
+
+``PYTHONPATH=src python -m benchmarks.compare_snapshots FRESH [BASELINE]
+--suite kernels --max-ratio 1.5``
+
+Compares ``us_per_call`` row by row (matched on ``(suite, name)``) for the
+selected suites and exits non-zero if any row regressed by more than
+``max-ratio``. BASELINE defaults to the lexically newest committed
+``benchmarks/snapshots/BENCH_*.json`` — snapshot files are date-stamped, so
+lexical order is chronological order.
+
+Machines differ (the committed baseline may come from faster or slower
+hardware than CI), so the ratio gate is deliberately loose: it catches
+"this op got several times slower", not single-digit-percent noise. Rows
+present on only one side are reported but never fail the gate (new ops have
+no baseline; retired ops have no fresh row).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+SNAPSHOTS = pathlib.Path(__file__).resolve().parent / "snapshots"
+
+
+def _latest_baseline() -> pathlib.Path:
+    files = sorted(SNAPSHOTS.glob("BENCH_*.json"))
+    if not files:
+        raise SystemExit("no committed BENCH_*.json baseline found")
+    return files[-1]
+
+
+def _rows(path: pathlib.Path, suites: set[str] | None) -> dict:
+    doc = json.loads(path.read_text())
+    return {
+        (r["suite"], r["name"]): float(r["us_per_call"])
+        for r in doc.get("rows", [])
+        if (suites is None or r["suite"] in suites) and r["us_per_call"] > 0
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", type=pathlib.Path)
+    ap.add_argument("baseline", type=pathlib.Path, nargs="?", default=None)
+    ap.add_argument("--suite", type=str, default="kernels",
+                    help="comma-separated suites to gate (default: kernels)")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="fail if fresh/baseline us_per_call exceeds this")
+    args = ap.parse_args(argv)
+
+    baseline = args.baseline or _latest_baseline()
+    suites = set(args.suite.split(",")) if args.suite else None
+    fresh = _rows(args.fresh, suites)
+    base = _rows(baseline, suites)
+
+    print(f"# baseline: {baseline}")
+    regressions = []
+    for key in sorted(set(fresh) | set(base)):
+        suite, name = key
+        if key not in base:
+            print(f"NEW       {suite}/{name}: {fresh[key]:.1f}us (no baseline)")
+            continue
+        if key not in fresh:
+            print(f"RETIRED   {suite}/{name}: baseline {base[key]:.1f}us")
+            continue
+        ratio = fresh[key] / base[key]
+        tag = "REGRESSED" if ratio > args.max_ratio else "ok"
+        print(f"{tag:9s} {suite}/{name}: {base[key]:.1f}us -> "
+              f"{fresh[key]:.1f}us ({ratio:.2f}x)")
+        if ratio > args.max_ratio:
+            regressions.append((suite, name, ratio))
+
+    if regressions:
+        print(f"# {len(regressions)} row(s) regressed past "
+              f"{args.max_ratio:.2f}x", file=sys.stderr)
+        return 1
+    print("# no regressions past the gate")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,6 +13,13 @@ partitioned module, so totals are already per-chip; the roofline divides by
 chips only when given whole-program numbers (``per_device=False``).
 
 Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+`engine_rooflines` points the same three-term model at the matcher itself:
+per-executable FLOPs / peak bytes / collective bytes come from the
+staticcheck cost model (`staticcheck/costmodel.py`) over the engine probe's
+recorded entry points, giving per-entry-point ``bottleneck`` and
+``roofline_fraction`` without any dry-run artifacts
+(``benchmarks/bench_roofline.py`` reports them).
 """
 from __future__ import annotations
 
@@ -130,6 +137,74 @@ class Roofline:
             "useful_flops_ratio": self.useful_flops_ratio,
             "roofline_fraction": self.roofline_fraction,
         }
+
+
+# ------------------------------------------------- matcher engine rooflines
+def engine_rooflines(
+    backends=None,
+    kernels=None,
+    *,
+    scale: int = 1,
+    n_chips: int | None = None,
+) -> "dict[str, Roofline]":
+    """Per-entry-point rooflines for the matcher engines, attributed from
+    the staticcheck cost model — nothing executes beyond the tiny probe.
+
+    `repro.analysis.staticcheck.engines.probe_traces` drives the real entry
+    points (compile / run / stream / re-stream) on every (engine × kernels)
+    combination and re-traces each cached executable;
+    `staticcheck.costmodel.estimate` then walks the jaxprs for FLOPs, peak
+    resident bytes and collective bytes. Per target (entry point), the
+    per-metric max across its executables — the same aggregation the
+    budgets pass uses — feeds one `Roofline`:
+
+      * ``flops``            — the cost model's counted ops;
+      * ``hbm_bytes``        — peak resident bytes, standing in for HBM
+        traffic (a floor: every resident byte is written and read at least
+        once; XLA fusion can only shrink it);
+      * ``collective_bytes`` — ring-convention collective bytes;
+      * ``model_flops``      — set equal to ``flops``: the matcher has no
+        closed-form useful-flops model (no 6·N·D), and every counted op is
+        algorithmically required at the jaxpr level, so
+        ``roofline_fraction`` reads as "fraction of the bounding term the
+        pure-compute time accounts for" (1.0 ⇔ compute-bound).
+
+    Returns ``{target: Roofline}`` with targets like
+    ``engine:local:jnp:match``.
+    """
+    import jax
+
+    from repro.analysis.staticcheck import costmodel
+    from repro.analysis.staticcheck import engines as _engines
+
+    backends = tuple(backends or _engines.ENGINE_BACKENDS)
+    kernels = tuple(kernels or _engines.KERNEL_BACKENDS)
+    chips = n_chips if n_chips is not None else jax.device_count()
+
+    worst: dict[str, dict] = {}
+    for b in backends:
+        for k in kernels:
+            _, traces = _engines.probe_traces(b, k, scale=scale)
+            for t in traces:
+                est = costmodel.estimate(t.jaxpr, t.target)
+                m = worst.setdefault(t.target, {
+                    "flops": 0.0, "peak_bytes": 0.0, "collective_bytes": 0.0,
+                })
+                m["flops"] = max(m["flops"], est.flops)
+                m["peak_bytes"] = max(m["peak_bytes"], est.peak_bytes)
+                m["collective_bytes"] = max(
+                    m["collective_bytes"], est.collective_bytes
+                )
+    return {
+        target: Roofline(
+            flops=m["flops"],
+            hbm_bytes=m["peak_bytes"],
+            collective_bytes=m["collective_bytes"],
+            n_chips=chips,
+            model_flops=m["flops"],
+        )
+        for target, m in sorted(worst.items())
+    }
 
 
 def model_flops_lm(cfg, batch: int, seq: int, kind: str) -> float:

@@ -101,8 +101,7 @@ def _contract_stwig_expand():
         _ex((2, 2), jnp.uint32),   # words_k
         _ex((16,), jnp.int32),     # dst_ids
         _ex((16,), jnp.int32),     # dst_labels
-        _ex((16,), jnp.int32),     # edge_src
-        _ex((16,), jnp.int32),     # seg_start
+        _ex((10,), jnp.int32),     # indptr (cap+2,)
         _ex((16,), jnp.bool_),     # root_ok
     ), dict(
         child_labels=(1, 2),
@@ -188,8 +187,7 @@ class Kernels:
         words_k,
         dst_ids,
         dst_labels,
-        edge_src,
-        seg_start,
+        indptr,
         root_ok,
         *,
         child_labels: tuple[int, ...],
@@ -199,13 +197,14 @@ class Kernels:
         n_total: int,
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Fused steps 2-3: per-child filter + per-root compaction into
-        candidate lists ``(k, cap+1, C)`` with exact counts ``(k, cap)``."""
+        candidate lists ``(k, cap+1, C)`` with exact counts ``(k, cap)``.
+        ``indptr`` is the ``(cap+2,)`` CSR bounds array (edges grouped by
+        root, ghost row ``cap`` owning the pad tail up to ``E``)."""
         return _expand_ref.stwig_expand_reference(
             words_k,
             dst_ids,
             dst_labels,
-            edge_src,
-            seg_start,
+            indptr,
             root_ok,
             child_labels=child_labels,
             child_bound=child_bound,

@@ -117,7 +117,11 @@ def match_stwig_shard(
         g.edge_src < cap
     )
     dst_labels = jnp.take(g.all_labels, g.indices, mode="clip")
-    seg_start = jnp.take(g.indptr, jnp.minimum(g.edge_src, cap), mode="clip")
+    # (cap+2,) CSR bounds: row r's edges at [indptr[r], indptr[r+1]), the
+    # ghost row cap owning the pad tail [indptr[cap], edge_cap)
+    indptr_pad = jnp.concatenate(
+        [g.indptr, jnp.full((1,), np.int32(edge_cap), jnp.int32)]
+    )
 
     if k > 0:
         words_k = jnp.stack([bind.words[q] for q in spec.child_qnodes])
@@ -125,8 +129,7 @@ def match_stwig_shard(
             words_k,
             g.indices,
             dst_labels,
-            g.edge_src,
-            seg_start,
+            indptr_pad,
             root_ok_e,
             child_labels=spec.child_labels,
             child_bound=spec.child_bound,

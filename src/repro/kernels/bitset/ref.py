@@ -77,12 +77,20 @@ def lookup_reference(words: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
 
 def build_reference(ids: jnp.ndarray, valid: jnp.ndarray, nwords: int) -> jnp.ndarray:
     """Build a packed bitset from (possibly duplicated) ids with a validity
-    mask. XLA has no scatter-OR combiner, so scatter booleans then pack 32
-    lanes per word (duplicate-safe); the Pallas backend packs in-kernel."""
+    mask. XLA has no scatter-OR combiner over packed words (duplicate ids
+    landing in one word would need an OR accumulator), so this is the
+    closest single-pass shape: one byte-lane scatter (duplicate-safe — all
+    updates write the same 1), then a 32-lane shift-OR fold per word. The
+    lanes scatter at uint8 instead of bool so the fold widens straight to
+    the word dtype; the Pallas backend runs the fold in-kernel."""
     n_bits = nwords * WORD_BITS
     idx = jnp.where(valid, ids, np.int32(n_bits))
-    bits = jnp.zeros((n_bits,), jnp.bool_).at[idx].set(True, mode="drop")
-    return pack_reference(bits)
+    lanes = jnp.zeros((n_bits,), jnp.uint8).at[idx].set(
+        np.uint8(1), mode="drop"
+    )
+    lanes32 = lanes.reshape(nwords, WORD_BITS).astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(lanes32 << shifts, axis=1, dtype=jnp.uint32)
 
 
 def or_reference(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

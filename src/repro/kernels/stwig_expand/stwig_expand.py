@@ -1,24 +1,41 @@
-"""Pallas TPU kernel fusing MatchSTwig steps 2-3 (paper Algorithm 1).
+"""Pallas TPU kernels fusing MatchSTwig steps 2-3 (paper Algorithm 1).
 
-One pass over the shard's edge array does, per child of the STwig:
-  * the candidate filter — dst-label equality ∧ binding-bit membership
-    (bitsets VMEM-resident, out-of-range ids masked False) ∧ root candidacy;
-  * per-root compaction — surviving destinations are appended to their
-    source row's fixed-capacity candidate list.
+Three short kernels replace the old single kernel's serial edge walk with
+per-tile vectorized compaction:
 
-The filter is fully vectorized per edge tile; the compaction walks the tile
-serially with scalar dynamic stores (TPU supports single-element dynamic
-load/store; XLA has no scatter-append at all, which is why the jnp oracle
-needs a cumsum + segment-rank detour). The grid is sequential over edge
-tiles and the outputs are revisited with a constant index map, so the
-running per-root counts carry across tiles for free.
+  * **mask+ics** — forward pass over edge tiles: the per-child candidate
+    filter (dst-label equality ∧ binding-bit membership, bitsets
+    VMEM-resident, out-of-range ids masked False ∧ root candidacy), then an
+    in-tile log-doubling inclusive prefix sum of the stacked ``(k, be)``
+    mask. A ``(k, 1)`` carry output revisited with a constant index map
+    threads the running totals across the sequential grid, so the prefix
+    sums are global and overflow-past-``child_cap`` semantics are
+    unchanged — counts keep growing past the materialized capacity.
+  * **nxt** — the same grid traversed in REVERSE via the block index map:
+    an in-tile log-doubling suffix-min of the survivor edge index
+    (sentinel = padded length) plus a carried minimum gives, per position,
+    the first surviving edge at or after it.
+  * **emit** — a grid over root tiles with the full ``(k, epad)`` prefix
+    arrays VMEM-resident: per root, exact counts from two boundary gathers
+    into the prefix sums, the candidate list from a ``child_cap``-step
+    vectorized gather chain through ``nxt``, and one whole-block store per
+    output. No scalar dynamic stores anywhere.
 
-Oracle: `repro.kernels.stwig_expand.ref.stwig_expand_reference` (the code
-previously inlined in `repro.core.match`).
+Edge arrays are padded to a tile multiple (pad dst = ghost ``n_total``,
+``root_ok`` = False), so any edge count — including odd/prime ``E`` —
+keeps full-width tiles; the old fallback halved the tile size until it
+divided ``E``, collapsing to 1-edge tiles for prime ``E``. Root tiles are
+padded the same way (empty segments at the pad sentinel) and sliced off
+the outputs.
+
+Oracle: `repro.kernels.stwig_expand.ref.stwig_expand_reference` (same
+scatter-free formulation in pure jnp).
 """
 from __future__ import annotations
 
 import functools
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -27,71 +44,137 @@ from jax.experimental import pallas as pl
 from repro.kernels.bitset.ref import lookup_reference
 
 
-def _expand_kernel(
+def _mask_ics_kernel(
     w_ref,      # (k, W) uint32 binding bitsets
-    dst_ref,    # (BE,) int32 destination ids
-    lab_ref,    # (BE,) int32 destination labels
-    src_ref,    # (BE,) int32 local source rows
-    rok_ref,    # (BE,) bool root-candidacy
-    cand_ref,   # (k, cap+1, C) int32 out — revisited every tile
-    cnt_ref,    # (k, cap+1) int32 out — revisited every tile
+    dst_ref,    # (be,) int32 destination ids
+    lab_ref,    # (be,) int32 destination labels
+    rok_ref,    # (be,) bool root-candidacy
+    mask_ref,   # (k, be) bool out — survivor mask
+    ics_ref,    # (k, be) int32 out — global inclusive cumsum of the mask
+    carry_ref,  # (k, 1) int32 — running totals, revisited every tile
     *,
     child_labels: tuple[int, ...],
     child_bound: tuple[bool, ...],
-    C: int,
-    n_total: int,
     be: int,
 ):
     k = len(child_labels)
 
     @pl.when(pl.program_id(0) == 0)
     def _init():
-        cand_ref[...] = jnp.full(cand_ref.shape, n_total, jnp.int32)
-        cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.int32)
+        carry_ref[...] = jnp.zeros(carry_ref.shape, jnp.int32)
 
     ids = dst_ref[...]
     labs = lab_ref[...]
     rok = rok_ref[...]
     words = w_ref[...]
-
-    # ---- vectorized per-child filter over the tile ------------------------
     masks = []
     for c in range(k):
-        m = rok & (labs == child_labels[c])
+        m = rok & (labs == np.int32(child_labels[c]))
         if child_bound[c]:
             m &= lookup_reference(words[c], ids)
         masks.append(m)
-    mk = jnp.stack(masks)  # (k, BE)
+    mk = jnp.stack(masks)                       # (k, be)
+    x = mk.astype(jnp.int32)
+    s = 1
+    while s < be:                               # log-doubling inclusive scan
+        x = x + jnp.pad(x, ((0, 0), (s, 0)))[:, :be]
+        s *= 2
+    x = x + carry_ref[...]
+    mask_ref[...] = mk
+    ics_ref[...] = x
+    carry_ref[...] = x[:, -1:]
 
-    # ---- serial per-root compaction (scalar dynamic stores) ---------------
-    def body(e, _):
-        s = src_ref[e]
-        d = ids[e]
-        for c in range(k):
 
-            @pl.when(mk[c, e])
-            def _append(c=c):
-                p = cnt_ref[c, s]
+def _nxt_kernel(mask_ref, nxt_ref, carry_ref, *, k, be, n_tiles, epad):
+    """Reverse traversal (index map runs tiles last-to-first): per position,
+    the smallest surviving global edge index at or after it (sentinel
+    ``epad``), via in-tile suffix-min + carried minimum."""
+    t = pl.program_id(0)                        # 0 => LAST tile
 
-                @pl.when(p < C)
-                def _store():
-                    cand_ref[c, s, p] = d
+    @pl.when(t == 0)
+    def _init():
+        carry_ref[...] = jnp.full(carry_ref.shape, np.int32(epad), jnp.int32)
 
-                # the count keeps growing past C: callers detect overflow
-                cnt_ref[c, s] = p + 1
+    tile = (n_tiles - 1) - t                    # actual tile index
+    gidx = np.int32(be) * tile.astype(jnp.int32) + jax.lax.broadcasted_iota(
+        jnp.int32, (k, be), 1
+    )
+    y = jnp.where(mask_ref[...], gidx, np.int32(epad))
+    s = 1
+    while s < be:
+        y = jnp.minimum(
+            y,
+            jnp.pad(y, ((0, 0), (0, s)), constant_values=np.int32(epad))[:, s:],
+        )
+        s *= 2
+    y = jnp.minimum(y, carry_ref[...])
+    nxt_ref[...] = y
+    carry_ref[...] = y[:, :1]
 
-        return 0
 
-    jax.lax.fori_loop(0, be, body, 0)
+def _emit_kernel(
+    lo_ref,    # (rt,) int32 segment starts
+    hi_ref,    # (rt,) int32 segment ends
+    ics_ref,   # (k, epad) int32 — whole array resident
+    nxt_ref,   # (k, epad) int32 — whole array resident
+    dst_ref,   # (epad,) int32 — whole array resident
+    cand_ref,  # (k, rt, C) int32 out
+    cnt_ref,   # (k, rt) int32 out
+    *,
+    k: int,
+    C: int,
+    n_total: int,
+    epad: int,
+):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    iep = np.int32(epad)
+    cands, cnts = [], []
+    for c in range(k):
+        ic = ics_ref[c]
+        nx = nxt_ref[c]
+        base = jnp.where(
+            lo > 0, jnp.take(ic, jnp.maximum(lo - 1, 0), mode="clip"),
+            np.int32(0),
+        )
+        last = jnp.where(
+            hi > 0, jnp.take(ic, jnp.maximum(hi - 1, 0), mode="clip"),
+            np.int32(0),
+        )
+        cnt = last - base                       # (rt,) exact counts
+        e = jnp.where(
+            lo < iep,
+            jnp.take(nx, jnp.minimum(lo, iep - np.int32(1)), mode="clip"),
+            iep,
+        )
+        es = [e]
+        for _ in range(C - 1):
+            q = e + np.int32(1)
+            e = jnp.where(
+                q < iep,
+                jnp.take(nx, jnp.minimum(q, iep - np.int32(1)), mode="clip"),
+                iep,
+            )
+            es.append(e)
+        ee = jnp.stack(es, axis=1)              # (rt, C)
+        slots = jax.lax.broadcasted_iota(jnp.int32, ee.shape, 1)
+        cv = jnp.where(
+            slots < cnt[:, None],
+            jnp.take(dst_ref[...], jnp.minimum(ee, iep - np.int32(1)),
+                     mode="clip"),
+            np.int32(n_total),
+        )
+        cands.append(cv)
+        cnts.append(cnt)
+    cand_ref[...] = jnp.stack(cands)
+    cnt_ref[...] = jnp.stack(cnts)
 
 
 def stwig_expand(
     words_k: jnp.ndarray,     # (k, W) uint32
     dst_ids: jnp.ndarray,     # (E,) int32
     dst_labels: jnp.ndarray,  # (E,) int32
-    edge_src: jnp.ndarray,    # (E,) int32, pad = cap (masked out via root_ok)
-    seg_start: jnp.ndarray,   # (E,) int32 — unused here (the sequential walk
-    #                           carries counts); kept for oracle parity
+    indptr: jnp.ndarray,      # (cap+2,) int32 CSR bounds incl. pad tail
     root_ok: jnp.ndarray,     # (E,) bool
     *,
     child_labels: tuple[int, ...],
@@ -100,41 +183,95 @@ def stwig_expand(
     cap: int,
     n_total: int,
     be: int = 2048,
+    rt: int = 512,
     interpret: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused filter + compaction: ``cand (k, cap+1, C)``, ``cnt (k, cap)``."""
-    del seg_start
     k = len(child_labels)
     assert k >= 1 and words_k.shape[0] == k
+    C = child_cap
     E = dst_ids.shape[0]
-    be = min(be, E)
-    while E % be:
-        be //= 2
-    cand, cnt = pl.pallas_call(
+    be = min(be, max(E, 1))
+    n_tiles = -(-E // be) if E else 1
+    epad = n_tiles * be
+    pad_e = epad - E
+    if pad_e:  # full-width tiles for any E (prime E included)
+        dst_ids = jnp.pad(dst_ids, (0, pad_e), constant_values=np.int32(n_total))
+        dst_labels = jnp.pad(dst_labels, (0, pad_e))
+        root_ok = jnp.pad(root_ok, (0, pad_e))
+
+    mask, ics, _ = pl.pallas_call(
         functools.partial(
-            _expand_kernel,
+            _mask_ics_kernel,
             child_labels=tuple(child_labels),
             child_bound=tuple(child_bound),
-            C=child_cap,
-            n_total=n_total,
             be=be,
         ),
-        grid=(E // be,),
+        grid=(n_tiles,),
         in_specs=[
             pl.BlockSpec(words_k.shape, lambda i: (0, 0)),
             pl.BlockSpec((be,), lambda i: (i,)),
             pl.BlockSpec((be,), lambda i: (i,)),
             pl.BlockSpec((be,), lambda i: (i,)),
-            pl.BlockSpec((be,), lambda i: (i,)),
         ],
         out_specs=[
-            pl.BlockSpec((k, cap + 1, child_cap), lambda i: (0, 0, 0)),
-            pl.BlockSpec((k, cap + 1), lambda i: (0, 0)),
+            pl.BlockSpec((k, be), lambda i: (0, i)),
+            pl.BlockSpec((k, be), lambda i: (0, i)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((k, cap + 1, child_cap), jnp.int32),
-            jax.ShapeDtypeStruct((k, cap + 1), jnp.int32),
+            jax.ShapeDtypeStruct((k, epad), jnp.bool_),
+            jax.ShapeDtypeStruct((k, epad), jnp.int32),
+            jax.ShapeDtypeStruct((k, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(words_k, dst_ids, dst_labels, edge_src, root_ok)
-    return cand, cnt[:, :cap]
+    )(words_k, dst_ids, dst_labels, root_ok)
+
+    nxt, _ = pl.pallas_call(
+        functools.partial(_nxt_kernel, k=k, be=be, n_tiles=n_tiles, epad=epad),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((k, be), lambda i, n=n_tiles: (0, n - 1 - i))],
+        out_specs=[
+            pl.BlockSpec((k, be), lambda i, n=n_tiles: (0, n - 1 - i)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, epad), jnp.int32),
+            jax.ShapeDtypeStruct((k, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(mask)
+
+    # per-root CSR segment bounds; pad roots get the empty segment
+    # [epad, epad) so they emit zero counts and all-ghost rows
+    lo = indptr[:-1]
+    hi = indptr[1:]
+    R = cap + 1
+    rt = min(rt, R)
+    r_tiles = -(-R // rt)
+    rpad = r_tiles * rt - R
+    if rpad:
+        lo = jnp.pad(lo, (0, rpad), constant_values=np.int32(epad))
+        hi = jnp.pad(hi, (0, rpad), constant_values=np.int32(epad))
+
+    cand, cnt = pl.pallas_call(
+        functools.partial(_emit_kernel, k=k, C=C, n_total=n_total, epad=epad),
+        grid=(r_tiles,),
+        in_specs=[
+            pl.BlockSpec((rt,), lambda i: (i,)),
+            pl.BlockSpec((rt,), lambda i: (i,)),
+            pl.BlockSpec((k, epad), lambda i: (0, 0)),
+            pl.BlockSpec((k, epad), lambda i: (0, 0)),
+            pl.BlockSpec((epad,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, rt, C), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, rt), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, r_tiles * rt, C), jnp.int32),
+            jax.ShapeDtypeStruct((k, r_tiles * rt), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lo, hi, ics, nxt, dst_ids)
+    return cand[:, :cap + 1], cnt[:, :cap]

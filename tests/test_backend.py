@@ -116,34 +116,130 @@ def test_parity_candidate_filter():
     assert (a == b).all()
 
 
-def _expand_inputs(rng, cap=41, E=160, n_total=300, k=2):
+def _expand_inputs(rng, cap=41, E=160, n_total=300, k=2, child_cap=3,
+                   n_labels=4):
     src = np.sort(rng.integers(0, cap, E)).astype(np.int32)
-    seg_start = np.searchsorted(src, src, side="left").astype(np.int32)
+    # (cap+2,) CSR bounds over the edge arrays; indptr[cap+1] == E
+    indptr = np.searchsorted(src, np.arange(cap + 2)).astype(np.int32)
     dst = rng.integers(0, n_total, E).astype(np.int32)
-    labs = rng.integers(0, 4, E).astype(np.int32)
+    labs = rng.integers(0, n_labels, E).astype(np.int32)
     rok = rng.random(E) < 0.8
     W = n_words(n_total + 1)
     words = rng.integers(0, 2**32, (k, W), dtype=np.uint32)
-    args = tuple(
-        jnp.asarray(x) for x in (words, dst, labs, src, seg_start, rok)
-    )
+    args = tuple(jnp.asarray(x) for x in (words, dst, labs, indptr, rok))
     kw = dict(
         child_labels=(1, 2),
         child_bound=(True, False),
-        child_cap=3,
+        child_cap=child_cap,
         cap=cap,
         n_total=n_total,
     )
     return args, kw
 
 
+def _expand_oracle_np(args, kw):
+    """Host-side reference: per root r, the surviving dsts of the edges in
+    [indptr[r], indptr[r+1]) in edge order; exact counts."""
+    from repro.kernels.bitset.ref import bitset_test_np
+
+    words, dst, labs, indptr, rok = (np.asarray(a) for a in args)
+    k = len(kw["child_labels"])
+    cap, C, n_total = kw["cap"], kw["child_cap"], kw["n_total"]
+    cand = np.full((k, cap + 1, C), n_total, np.int32)
+    cnt = np.zeros((k, cap), np.int32)
+    for c in range(k):
+        m = rok & (labs == kw["child_labels"][c])
+        if kw["child_bound"][c]:
+            m &= bitset_test_np(words[c], dst)
+        for r in range(cap):
+            sel = dst[indptr[r]:indptr[r + 1]][m[indptr[r]:indptr[r + 1]]]
+            cnt[c, r] = len(sel)
+            cand[c, r, : min(len(sel), C)] = sel[:C]
+    return cand, cnt
+
+
+def _assert_expand_parity(args, kw):
+    cj, nj = JNP.stwig_expand(*args, **kw)
+    cp, np_ = PAL.stwig_expand(*args, **kw)
+    assert (np.asarray(nj) == np.asarray(np_)).all()
+    assert (np.asarray(cj) == np.asarray(cp)).all()
+    co, no = _expand_oracle_np(args, kw)
+    assert (np.asarray(nj) == no).all()
+    assert (np.asarray(cj) == co).all()
+
+
 def test_parity_stwig_expand():
     for seed in range(3):
         args, kw = _expand_inputs(np.random.default_rng(seed))
-        cj, nj = JNP.stwig_expand(*args, **kw)
-        cp, np_ = PAL.stwig_expand(*args, **kw)
-        assert (np.asarray(nj) == np.asarray(np_)).all()
-        assert (np.asarray(cj) == np.asarray(cp)).all()
+        _assert_expand_parity(args, kw)
+
+
+def test_stwig_expand_counts_grow_past_child_cap():
+    """cnt is EXACT even when a root has more survivors than child_cap —
+    the overflow signal the engine's adaptive retry keys on."""
+    # one root owns every edge, labels/bitsets fully permissive
+    E, cap, n_total = 64, 5, 100
+    indptr = np.zeros(cap + 2, np.int32)
+    indptr[1:] = E  # root 0 owns [0, E)
+    dst = np.arange(E, dtype=np.int32)
+    labs = np.full(E, 1, np.int32)
+    rok = np.ones(E, bool)
+    words = np.full((2, n_words(n_total + 1)), 0xFFFFFFFF, np.uint32)
+    args = tuple(jnp.asarray(x) for x in (words, dst, labs, indptr, rok))
+    kw = dict(child_labels=(1, 1), child_bound=(True, False), child_cap=3,
+              cap=cap, n_total=n_total)
+    for kern in (JNP, PAL):
+        cand, cnt = kern.stwig_expand(*args, **kw)
+        assert (np.asarray(cnt)[:, 0] == E).all()      # exact, not clamped
+        assert (np.asarray(cnt)[:, 1:] == 0).all()
+        assert (np.asarray(cand)[:, 0] == [0, 1, 2]).all()  # first C, in order
+        assert (np.asarray(cand)[:, 1:] == n_total).all()
+    _assert_expand_parity(args, kw)
+
+
+def test_stwig_expand_segment_straddles_tiles():
+    """A root whose surviving edges straddle an edge-tile boundary must
+    compact across the carry (pallas tiles at be; force multiple tiles)."""
+    from repro.kernels.stwig_expand.stwig_expand import stwig_expand
+
+    rng = np.random.default_rng(11)
+    cap, n_total, be = 3, 400, 16
+    E = 3 * be  # three tiles
+    # root 1's segment covers the first two tile boundaries
+    src = np.concatenate([
+        np.zeros(4, np.int32), np.full(E - 8, 1, np.int32),
+        np.full(4, 2, np.int32),
+    ])
+    indptr = np.searchsorted(src, np.arange(cap + 2)).astype(np.int32)
+    dst = rng.integers(0, n_total, E).astype(np.int32)
+    labs = rng.integers(0, 2, E).astype(np.int32)
+    rok = np.ones(E, bool)
+    words = rng.integers(0, 2**32, (2, n_words(n_total + 1)), dtype=np.uint32)
+    args = tuple(jnp.asarray(x) for x in (words, dst, labs, indptr, rok))
+    kw = dict(child_labels=(1, 0), child_bound=(True, False), child_cap=6,
+              cap=cap, n_total=n_total)
+    cj, nj = JNP.stwig_expand(*args, **kw)
+    cp, np_ = stwig_expand(*args, **kw, be=be, interpret=True)
+    assert (np.asarray(nj) == np.asarray(np_)).all()
+    assert (np.asarray(cj) == np.asarray(cp)).all()
+    co, no = _expand_oracle_np(args, kw)
+    assert (np.asarray(nj) == no).all() and (np.asarray(cj) == co).all()
+
+
+@pytest.mark.parametrize("E", [128, 160, 127])  # pow2, non-pow2, prime
+def test_parity_stwig_expand_edge_lengths(E):
+    """Pinned regression for the degenerate tile fallback: the old kernel
+    halved the tile size until it divided E — be=1 (an E-step grid) for
+    prime E. The padded-tile kernel must stay exact for any E, including
+    a tile size that does NOT divide E (forced be=32)."""
+    from repro.kernels.stwig_expand.stwig_expand import stwig_expand
+
+    args, kw = _expand_inputs(np.random.default_rng(17), E=E)
+    _assert_expand_parity(args, kw)
+    cj, nj = JNP.stwig_expand(*args, **kw)
+    cp, np_ = stwig_expand(*args, **kw, be=32, interpret=True)
+    assert (np.asarray(nj) == np.asarray(np_)).all()
+    assert (np.asarray(cj) == np.asarray(cp)).all()
 
 
 def test_parity_hash_join_probe():

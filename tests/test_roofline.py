@@ -6,6 +6,7 @@ from repro.analysis.roofline import (
     ICI_BW,
     PEAK_FLOPS,
     Roofline,
+    engine_rooflines,
     model_flops_lm,
     parse_collectives,
 )
@@ -56,6 +57,28 @@ def test_roofline_terms_and_bottleneck():
     assert r.bottleneck == "collective"
     assert np.isclose(r.useful_flops_ratio, 1.0)
     assert np.isclose(r.roofline_fraction, 0.5)  # ideal 1s / bound 2s
+
+
+def test_engine_rooflines_attribute_matcher_entry_points():
+    """The matcher-targeted roofline: cost-model attribution for every
+    recorded engine entry point, no dry-run artifacts involved. One
+    (engine x kernels) combination keeps the probe cheap; the benchmark
+    suite (bench_roofline) runs all four."""
+    rooflines = engine_rooflines(backends=("local",), kernels=("jnp",))
+    # the probe query decomposes into >=2 STwigs: match AND join entry
+    # points must both be recorded and attributed
+    targets = set(rooflines)
+    assert any(t.endswith(":match") for t in targets), targets
+    assert any(t.endswith(":join") for t in targets), targets
+    for target, r in rooflines.items():
+        assert target.startswith("engine:local:jnp:")
+        assert r.flops > 0 and r.hbm_bytes > 0
+        assert r.bottleneck in ("compute", "memory", "collective")
+        assert 0.0 < r.roofline_fraction <= 1.0
+        d = r.to_dict()
+        assert d["bottleneck"] == r.bottleneck
+    # single-process probe moves no collective bytes -> never the bottleneck
+    assert all(r.bottleneck != "collective" for r in rooflines.values())
 
 
 def test_model_flops_published_configs():
